@@ -1,0 +1,60 @@
+"""§Roofline source table: per (arch x shape x mesh) terms from the cached
+dry-run artifacts (experiments/dryrun/*.json). Re-run the dry-run to refresh:
+``PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both``."""
+import glob
+import json
+import os
+from typing import List, Tuple
+
+
+def load_records(pattern: str = "experiments/dryrun/*.json"):
+    recs = []
+    for f in sorted(glob.glob(pattern)):
+        if "__opt" in os.path.basename(f):
+            continue  # hillclimb variants reported separately in §Perf
+        try:
+            recs.append(json.load(open(f)))
+        except Exception:
+            pass
+    return recs
+
+
+def run(verbose: bool = False) -> List[Tuple[str, float, str]]:
+    recs = load_records()
+    rows: List[Tuple[str, float, str]] = []
+    if not recs:
+        return [("roofline_table", 0.0, "no dryrun artifacts cached")]
+    if verbose:
+        print("\n# Roofline terms per (arch x shape x mesh) [seconds/step]")
+        print("arch,shape,mesh,compute_s,memory_s,memory_floor_s,"
+              "collective_s,dominant,mfu,useful_flops,fits_hbm")
+    worst = None
+    for r in recs:
+        rl = r["roofline"]
+        if verbose:
+            print(f"{r['arch']},{r['shape']},{r['mesh']},"
+                  f"{rl['compute_s']:.4f},{rl['memory_s']:.4f},"
+                  f"{rl.get('memory_s_floor', 0):.4f},"
+                  f"{rl['collective_s']:.4f},{rl['dominant']},"
+                  f"{rl['mfu']:.4f},{rl['useful_flops_ratio']:.3f},"
+                  f"{r['fits_hbm']}")
+        if r["kind"] == "train" and (worst is None
+                                     or rl["mfu"] < worst[1]):
+            worst = (f"{r['arch']}/{r['shape']}/{r['mesh']}", rl["mfu"])
+    n_ok = len(recs)
+    rows.append(("roofline_cells_compiled", 0.0, f"n={n_ok}"))
+    if worst:
+        rows.append(("roofline_worst_train_mfu", 0.0,
+                     f"{worst[0]}={worst[1]:.4f}"))
+    dom = {}
+    for r in recs:
+        dom[r["roofline"]["dominant"]] = dom.get(
+            r["roofline"]["dominant"], 0) + 1
+    rows.append(("roofline_dominant_histogram", 0.0,
+                 ";".join(f"{k}={v}" for k, v in sorted(dom.items()))))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(verbose=True):
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,55 @@
+"""Framework step-latency microbench (reduced configs, CPU): wall time per
+train step for each architecture family — the regression canary for the
+substrate layers."""
+import dataclasses
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES_BY_NAME, get_config
+from repro.launch import steps as steps_mod
+from repro.models import model as model_mod
+from repro.models.transformer import Runtime
+from repro.optim import OptConfig, init_opt_state
+
+ARCHS = ["stablelm-12b", "dbrx-132b", "deepseek-v3-671b", "mamba2-2.7b",
+         "recurrentgemma-2b", "seamless-m4t-large-v2"]
+
+
+def run(verbose: bool = False) -> List[Tuple[str, float, str]]:
+    rows = []
+    rt = Runtime(tp=1, moe_impl="local")
+    for arch in ARCHS:
+        cfg = dataclasses.replace(get_config(arch).reduced(),
+                                  dtype="float32")
+        key = jax.random.PRNGKey(0)
+        params, _ = model_mod.init_params(cfg, rt, key)
+        state = {"params": params, "opt": init_opt_state(params)}
+        B, S = 2, 64
+        batch = {"tokens": jax.random.randint(key, (B, S + 1), 0,
+                                              cfg.vocab_size)}
+        if cfg.frontend_seq:
+            batch["frontend"] = jax.random.normal(
+                key, (B, cfg.frontend_seq, cfg.d_model), jnp.float32) * 0.02
+        step = jax.jit(steps_mod.make_train_step(cfg, rt, OptConfig()),
+                       donate_argnums=(0,))
+        state, m = step(state, batch)          # compile
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        n = 3
+        for _ in range(n):
+            state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+        us = (time.perf_counter() - t0) * 1e6 / n
+        rows.append((f"train_step_{arch}", us,
+                     f"loss={float(m['loss']):.3f}"))
+        if verbose:
+            print(f"{arch}: {us/1e3:.1f} ms/step loss={float(m['loss']):.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(verbose=True):
+        print(",".join(str(x) for x in r))

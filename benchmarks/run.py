@@ -1,0 +1,30 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV (plus verbose tables when run directly).
+import sys
+
+
+def main() -> None:
+    verbose = "--quiet" not in sys.argv
+    from benchmarks import (bench_membw, bench_modal, bench_projection,
+                            bench_roofline_table, bench_train_step,
+                            bench_vai)
+    suites = [
+        ("vai", bench_vai),                  # Figs. 4/5, Table III
+        ("membw", bench_membw),              # Fig. 6
+        ("modal", bench_modal),              # Fig. 8, Table IV
+        ("projection", bench_projection),    # Tables V & VI
+        ("roofline", bench_roofline_table),  # §Roofline source
+        ("train_step", bench_train_step),    # framework canary
+    ]
+    print("name,us_per_call,derived")
+    for name, mod in suites:
+        try:
+            for row in mod.run(verbose=verbose):
+                print(",".join(str(x) for x in row))
+        except Exception as e:  # keep the harness running
+            print(f"{name}_FAILED,0,{type(e).__name__}:{e}")
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: train a reduced-config model for a few hundred steps with the
+energy-aware runtime (governor + telemetry + checkpointing) on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 200]
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import SHAPES_BY_NAME, get_config
+from repro.launch.train import TrainConfig, Trainer
+from repro.models.transformer import Runtime
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-12b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_quickstart_ckpt")
+    ap.add_argument("--medium", action="store_true",
+                    help="~15M-param config (CPU-scale end-to-end run)")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(get_config(args.arch).reduced(),
+                              dtype="float32")
+    if args.medium:
+        cfg = dataclasses.replace(
+            cfg, n_layers=8, d_model=256, n_heads=8, n_kv_heads=4,
+            d_ff=1024, vocab_size=8192, head_dim=32)
+    shape = SHAPES_BY_NAME["train_4k"].reduced()
+    if args.medium:
+        shape = dataclasses.replace(shape, seq_len=128, global_batch=4)
+    rt = Runtime(tp=1, moe_impl="local")
+    trainer = Trainer(cfg, shape, rt, tcfg=TrainConfig(
+        steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_interval=50,
+        governor=True, log_every=20))
+    out = trainer.run()
+    print(f"\nloss: {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+    print(f"projected energy: {out['energy_j']:.1f} J "
+          f"(governor mode-hours: {trainer.telemetry.mode_hours_pct()})")
+    print(f"checkpoints: {trainer.checkpointer.latest()} "
+          f"(restart resumes bitwise — see tests/test_checkpoint_restart.py)")
+
+
+if __name__ == "__main__":
+    main()

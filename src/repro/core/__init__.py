@@ -1,0 +1,22 @@
+"""The paper's primary contribution: power-management analysis & actuation.
+
+hardware     — chip specs + the paper's measured MI250X response tables
+power_model  — roofline-position -> (time, power, energy) under DVFS/caps
+modal        — fleet power-histogram modal decomposition (Table IV)
+projection   — energy-savings projection engine (Tables V/VI, decoded exact)
+governor     — online per-step DVFS governor (the technique as a feature)
+telemetry    — out-of-band-style power telemetry store + scheduler job log
+vai          — VAI roofline-sweep driver over the Pallas kernel
+roofline     — compiled-artifact roofline terms (three-term model)
+hlo_cost     — trip-count-aware HLO cost analysis (flops/bytes/collectives)
+"""
+from repro.core import hardware  # noqa: F401
+from repro.core import hlo_cost  # noqa: F401
+from repro.core import modal  # noqa: F401
+from repro.core import power_model  # noqa: F401
+from repro.core import projection  # noqa: F401
+from repro.core import roofline  # noqa: F401
+from repro.core.governor import (  # noqa: F401
+    Decision, GovernorConfig, PowerGovernor, SimulatedActuator)
+from repro.core.telemetry import (  # noqa: F401
+    JobLog, JobRecord, StepSample, TelemetryStore)

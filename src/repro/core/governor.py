@@ -1,0 +1,105 @@
+"""Energy-aware DVFS governor — the paper's policy as an online feature.
+
+Per compiled step the governor: (1) classifies the step's mode from its
+roofline profile, (2) sweeps the frequency grid through the power model,
+(3) picks the frequency minimizing energy subject to a slowdown budget.
+The default budget dT=0 reproduces the paper's "Energy Sav. (%) dT=0"
+column semantics: memory/latency-bound steps clock down for free,
+compute-bound steps stay at nominal.
+
+Actuation is behind ``PowerActuator``: ``SimulatedActuator`` applies the
+calibrated transfer functions (this container has no power rails);
+deployments implement ``apply(freq_mhz)`` as their platform RPC.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Protocol, Tuple
+
+from repro.core import power_model as pm
+from repro.core.hardware import ChipSpec, Mode, TPU_V5E
+
+
+class PowerActuator(Protocol):
+    def apply(self, freq_mhz: int) -> None: ...
+    def current_mhz(self) -> int: ...
+
+
+class SimulatedActuator:
+    """No hardware rails on CPU: records requested frequencies and lets the
+    power model supply the (time, power) consequences."""
+
+    def __init__(self, chip: ChipSpec = TPU_V5E):
+        self.chip = chip
+        self._freq = chip.f_nominal_mhz
+        self.history: List[int] = []
+
+    def apply(self, freq_mhz: int) -> None:
+        self._freq = int(freq_mhz)
+        self.history.append(self._freq)
+
+    def current_mhz(self) -> int:
+        return self._freq
+
+
+@dataclass(frozen=True)
+class GovernorConfig:
+    slowdown_budget: float = 0.0        # dT budget (0 = paper's dT=0 column)
+    n_freqs: int = 11                   # frequency grid resolution
+    power_cap_w: Optional[float] = None
+
+
+@dataclass
+class Decision:
+    freq_mhz: int
+    freq_frac: float
+    mode: Mode
+    time_s: float
+    power_w: float
+    energy_j: float
+    baseline_energy_j: float
+
+    @property
+    def savings_pct(self) -> float:
+        return 100.0 * (1.0 - self.energy_j
+                        / max(self.baseline_energy_j, 1e-12))
+
+
+class PowerGovernor:
+    def __init__(self, cfg: GovernorConfig = GovernorConfig(),
+                 chip: ChipSpec = TPU_V5E,
+                 actuator: Optional[PowerActuator] = None):
+        self.cfg = cfg
+        self.chip = chip
+        self.actuator = actuator or SimulatedActuator(chip)
+
+    def freq_grid(self) -> List[float]:
+        lo = self.chip.f_min_mhz / self.chip.f_nominal_mhz
+        n = self.cfg.n_freqs
+        return [lo + (1.0 - lo) * i / (n - 1) for i in range(n)]
+
+    def choose(self, profile: pm.StepProfile) -> Decision:
+        chip = self.chip
+        t0 = pm.step_time(profile, 1.0)
+        e0 = pm.energy_j(profile, 1.0, chip)
+        budget = t0 * (1.0 + self.cfg.slowdown_budget)
+        best_f, best_e = 1.0, e0
+        for f in self.freq_grid():
+            if self.cfg.power_cap_w is not None:
+                if pm.power_w(profile, f, chip) > self.cfg.power_cap_w:
+                    continue
+            t = pm.step_time(profile, f)
+            if t > budget * (1.0 + 1e-9):
+                continue
+            e = pm.energy_j(profile, f, chip)
+            if e < best_e - 1e-12:
+                best_f, best_e = f, e
+        freq_mhz = int(round(best_f * chip.f_nominal_mhz))
+        self.actuator.apply(freq_mhz)
+        return Decision(
+            freq_mhz=freq_mhz, freq_frac=best_f,
+            mode=pm.classify_mode(profile, chip),
+            time_s=pm.step_time(profile, best_f),
+            power_w=pm.power_w(profile, best_f, chip),
+            energy_j=best_e, baseline_energy_j=e0)

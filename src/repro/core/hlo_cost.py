@@ -1,0 +1,540 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``HloCostAnalysis`` (surfaced via ``compiled.cost_analysis()``) counts a
+``while`` body ONCE, regardless of trip count. Scan-based models (every layer
+stack here) therefore undercount FLOPs/bytes by ~n_layers x. This module
+parses the *optimized, partitioned* HLO text, recovers static trip counts from
+while-loop conditions, and walks the call graph with multipliers:
+
+* **flops**: 2 * result_elems * contracted_elems per ``dot`` (+1 flop/elem for
+  elementwise transcendentals/arithmetic, reported separately);
+* **bytes**: operands + results per instruction, with ``fusion`` treated as a
+  single kernel (bytes of the fusion op itself — the TPU-realistic model) and
+  in-place semantics for dynamic-update-slice / scatter / gather (KV-cache
+  updates must not be charged the whole cache);
+* **collective bytes**: operand bytes per collective op type, x multiplier.
+
+The result approximates the per-device cost of one step of the partitioned
+program — the quantity the §Roofline terms are defined over.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e3m4": 1,
+    "f8e4m3": 1, "f8e8m0fnu": 1, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+ELEMENTWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "rsqrt", "sqrt", "tanh",
+    "logistic", "power", "cosine", "sine", "negate", "abs", "atan2",
+}
+
+FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "custom-call",
+    "copy-start", "copy-done", "add-dependency", "opt-barrier",
+}
+
+_SHAPE_TOKEN = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_REF = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n
+
+
+def _text_bytes(text: str) -> int:
+    """Bytes of every dtype[dims] token in a type string (tuples -> sum)."""
+    total = 0
+    for dtype, dims in _SHAPE_TOKEN.findall(text):
+        b = _DTYPE_BYTES.get(dtype, 0)
+        if b:
+            total += b * _shape_elems(dims)
+    return total
+
+
+def _text_elems(text: str) -> int:
+    return sum(_shape_elems(dims) for _, dims in _SHAPE_TOKEN.findall(text))
+
+
+def _bf16_equiv_bytes(text: str) -> int:
+    """Bytes with f32/f64 capped at 2 B/elem — mixed-precision activation
+    traffic model (fp32 master/optimizer tensors are charged elsewhere at
+    full width because they appear as parameters, not fusion transients)."""
+    total = 0
+    for dtype, dims in _SHAPE_TOKEN.findall(text):
+        b = _DTYPE_BYTES.get(dtype, 0)
+        if b:
+            total += min(b, 2) * _shape_elems(dims)
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result: str              # result type text (no layout guarantees)
+    operands: List[str]      # operand instruction names (in order)
+    line: str
+
+
+@dataclass
+class CostTotals:
+    dot_flops: float = 0.0
+    elementwise_flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+    dot_table: Dict[str, float] = field(default_factory=dict)
+    bytes_table: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def flops(self) -> float:
+        return self.dot_flops + self.elementwise_flops
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def to_dict(self) -> Dict:
+        top = dict(sorted(self.dot_table.items(), key=lambda kv: -kv[1])[:12])
+        return {"flops": self.flops, "dot_flops": self.dot_flops,
+                "elementwise_flops": self.elementwise_flops,
+                "bytes_accessed": self.bytes_accessed,
+                "collective_bytes": dict(self.collective_bytes),
+                "collective_counts": dict(self.collective_counts),
+                "collective_total": self.collective_total,
+                "top_dots": top}
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq].strip()
+    rest = s[eq + 3:]
+    # result type: balanced paren group if tuple, else token up to space
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        result = rest[:i + 1]
+        rest = rest[i + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        result = rest[:sp]
+        rest = rest[sp + 1:]
+    par = rest.find("(")
+    if par < 0:
+        return None
+    opcode = rest[:par]
+    # operand region: balanced parens from ``par``
+    depth, j = 0, par
+    for j in range(par, len(rest)):
+        if rest[j] == "(":
+            depth += 1
+        elif rest[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    opnds = _REF.findall(rest[par + 1:j])
+    return Instr(name, opcode, result, opnds, line)
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.symbols: Dict[str, Dict[str, Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            s = line.strip()
+            if not s:
+                continue
+            if s.endswith("{") and (s.startswith("%") or s.startswith("ENTRY")):
+                hdr = s[len("ENTRY"):].strip() if s.startswith("ENTRY") else s
+                if hdr.startswith("%"):
+                    name = re.split(r"[\s(]", hdr[1:], 1)[0]
+                    cur = name
+                    self.computations[cur] = []
+                    self.symbols[cur] = {}
+                    if s.startswith("ENTRY"):
+                        self.entry = cur
+                continue
+            if s == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            ins = _parse_instr(line)
+            if ins:
+                self.computations[cur].append(ins)
+                self.symbols[cur][ins.name] = ins
+
+    # ------------------------------------------------------------ helpers
+    def _called(self, ins: Instr, attr: str) -> Optional[str]:
+        mm = re.search(attr + r"=%?([\w.\-]+)", ins.line)
+        return mm.group(1) if mm else None
+
+    def _operand_bytes(self, comp: str, ins: Instr,
+                       indices: Optional[List[int]] = None) -> int:
+        syms = self.symbols[comp]
+        names = (ins.operands if indices is None
+                 else [ins.operands[i] for i in indices
+                       if i < len(ins.operands)])
+        total = 0
+        for nm in names:
+            src = syms.get(nm)
+            if src is not None:
+                total += _text_bytes(src.result)
+        return total
+
+    def while_trip_count(self, cond_name: str) -> int:
+        block = self.computations.get(cond_name, [])
+        consts: Dict[str, int] = {}
+        for ins in block:
+            if ins.opcode == "constant":
+                mm = re.search(r"constant\((-?\d+)\)", ins.line)
+                if mm:
+                    consts[ins.name] = int(mm.group(1))
+        # compare may live behind a fusion; search cond block then callees
+        def find_cmp(blk_name: str) -> Optional[int]:
+            for ins in self.computations.get(blk_name, []):
+                if ins.opcode == "compare" and "direction=LT" in ins.line:
+                    for nm in ins.operands:
+                        if nm in consts:
+                            return consts[nm]
+                if ins.opcode == "fusion":
+                    for nm in ins.operands:
+                        if nm in consts:
+                            return consts[nm]
+            return None
+
+        val = find_cmp(cond_name)
+        if val is not None:
+            return max(val, 1)
+        if len(consts) == 1:
+            return max(next(iter(consts.values())), 1)
+        return 1
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        result_elems = _text_elems(ins.result)
+        mm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+        k = 1
+        if mm and ins.operands:
+            lhs = self.symbols[comp].get(ins.operands[0])
+            if lhs is not None:
+                toks = _SHAPE_TOKEN.findall(lhs.result)
+                if toks:
+                    dims = toks[0][1].split(",") if toks[0][1] else []
+                    for idx in mm.group(1).split(","):
+                        if idx.strip() and int(idx) < len(dims):
+                            k *= int(dims[int(idx)])
+        return 2.0 * result_elems * k
+
+    # ------------------------------------------------------------ cost walk
+    def analyze(self) -> CostTotals:
+        totals = CostTotals()
+        assert self.entry, "no ENTRY computation found"
+        self._walk(self.entry, 1.0, totals, count_bytes=True)
+        return totals
+
+    @staticmethod
+    def _charge(totals: 'CostTotals', op: str, ins: 'Instr', b: float) -> None:
+        totals.bytes_accessed += b
+        key = op + ' ' + ins.result.split('{')[0][:48]
+        totals.bytes_table[key] = totals.bytes_table.get(key, 0.0) + b
+
+    def _walk(self, comp: str, mult: float, totals: CostTotals,
+              count_bytes: bool) -> None:
+        for ins in self.computations.get(comp, []):
+            op = ins.opcode
+            if op in FREE_OPS:
+                continue
+            if op == "while":
+                body = self._called(ins, "body")
+                # authoritative: XLA records the static trip count
+                mm = re.search(r'"known_trip_count":\{"n":"(\d+)"', ins.line)
+                if mm:
+                    trips = max(int(mm.group(1)), 1)
+                else:
+                    cond = self._called(ins, "condition")
+                    trips = self.while_trip_count(cond) if cond else 1
+                if body:
+                    self._walk(body, mult * trips, totals, count_bytes=True)
+                continue
+            if op == "fusion":
+                called = self._called(ins, "calls")
+                if count_bytes:
+                    # purely-elementwise kLoop fusions would fuse into their
+                    # neighbours on TPU: charge the result only
+                    if called and self._elementwise_only(called):
+                        self._charge(totals, op, ins,
+                                     mult * _bf16_equiv_bytes(ins.result))
+                        self._walk(called, mult, totals, count_bytes=False)
+                        continue
+                    full = (_bf16_equiv_bytes(ins.result)
+                            + self._fusion_operand_bytes(comp, ins, called))
+                    # in-place DUS fusions (KV-cache writes): the aliased
+                    # buffer is neither fully read nor fully written — charge
+                    # the update region instead.
+                    adjust = 0
+                    if called:
+                        fsyms = self.symbols.get(called, {})
+                        for dins in self.computations.get(called, []):
+                            if dins.opcode != "dynamic-update-slice":
+                                continue
+                            if not dins.operands:
+                                continue
+                            buf = self._resolve_passthrough(
+                                fsyms, dins.operands[0])
+                            upd = (fsyms.get(dins.operands[1])
+                                   if len(dins.operands) > 1 else None)
+                            if buf is not None and buf.opcode == "parameter":
+                                bufb = _bf16_equiv_bytes(buf.result)
+                                updb = (_bf16_equiv_bytes(upd.result)
+                                        if upd is not None else 0)
+                                adjust += -2 * bufb + 2 * updb
+                    self._charge(totals, op, ins, mult * max(full + adjust, 0))
+                if called:
+                    self._walk(called, mult, totals, count_bytes=False)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                for attr in ("to_apply", "calls", "true_computation",
+                             "false_computation", "called_computation"):
+                    tgt = self._called(ins, attr)
+                    if tgt:
+                        self._walk(tgt, mult, totals, count_bytes)
+                continue
+            base = op[:-6] if op.endswith("-start") else op
+            if base in COLLECTIVE_OPS:
+                # bf16-equivalent wire accounting: CPU-XLA promotes bf16 math
+                # (and hence cotangent collectives) to f32; on the TPU build
+                # activation/gradient collectives run at the primal width
+                b = 0
+                syms = self.symbols[comp]
+                for nm in ins.operands:
+                    src = self._resolve_passthrough(syms, nm)
+                    direct = syms.get(nm)
+                    cand = [_bf16_equiv_bytes(x.result)
+                            for x in (src, direct) if x is not None]
+                    if cand:
+                        b += min(cand)
+                totals.collective_bytes[base] = (
+                    totals.collective_bytes.get(base, 0.0) + mult * b)
+                totals.collective_counts[base] = (
+                    totals.collective_counts.get(base, 0.0) + mult)
+                if count_bytes:
+                    self._charge(totals, op, ins,
+                                 mult * (_text_bytes(ins.result) + b))
+                continue
+            if op.endswith("-done") or op.endswith("-update"):
+                continue
+
+            # flops
+            if op == "dot":
+                f = self._dot_flops(comp, ins)
+                totals.dot_flops += mult * f
+                key = ins.result.split("{")[0]
+                totals.dot_table[key] = (
+                    totals.dot_table.get(key, 0.0) + mult * f)
+            elif op == "convolution":
+                totals.dot_flops += mult * 2.0 * _text_elems(ins.result)
+            elif op == "reduce":
+                totals.elementwise_flops += mult * self._operand_elems(
+                    comp, ins, [0])
+            elif op in ELEMENTWISE_FLOP_OPS:
+                totals.elementwise_flops += mult * _text_elems(ins.result)
+
+            # bytes (TPU-realistic fusion/aliasing model):
+            #  - DUS / scatter / gather: in-place (update-sized, not buffer)
+            #  - raw elementwise & converts: result-only — on TPU these fuse
+            #    into neighbouring kernels (CPU HLO leaves them unfused, which
+            #    would otherwise overcount HBM traffic several-fold)
+            #  - dots / layout ops: operands + result (they materialize)
+            if not count_bytes:
+                continue
+            if op == "dynamic-update-slice":
+                self._charge(totals, op, ins,
+                             mult * 2 * self._operand_bytes(comp, ins, [1]))
+            elif op == "scatter":
+                self._charge(totals, op, ins, mult * (
+                    self._operand_bytes(comp, ins, [1])
+                    + 2 * self._operand_bytes(comp, ins, [2])))
+            elif op in ("gather", "dynamic-slice"):
+                self._charge(totals, op, ins, mult * 2 * _text_bytes(ins.result))
+            elif (op in ELEMENTWISE_FLOP_OPS
+                  or op in ("convert", "select", "compare", "clamp", "and",
+                            "or", "not", "xor", "sign", "floor", "ceil",
+                            "round-nearest-afz", "is-finite", "broadcast",
+                            "reduce", "exponential-minus-one")):
+                self._charge(totals, op, ins,
+                             mult * _bf16_equiv_bytes(ins.result))
+            elif op == "dot":
+                # CPU lowers bf16 dots via f32 converts; charge operands at
+                # their pre-convert dtype (what the TPU MXU would read)
+                b = _text_bytes(ins.result)
+                for nm in ins.operands:
+                    src = self._resolve_passthrough(self.symbols[comp], nm)
+                    direct = self.symbols[comp].get(nm)
+                    cand = [x for x in (src, direct) if x is not None]
+                    if cand:
+                        b += min(_text_bytes(x.result) for x in cand)
+                self._charge(totals, op, ins, mult * b)
+            else:
+                self._charge(totals, op, ins, mult * (
+                    _text_bytes(ins.result)
+                    + self._operand_bytes(comp, ins)))
+
+    _PASSTHROUGH = {"convert", "copy", "bitcast", "reshape", "transpose"}
+    _EW_FUSABLE = (ELEMENTWISE_FLOP_OPS
+                   | {"convert", "select", "compare", "clamp", "and", "or",
+                      "not", "xor", "sign", "floor", "ceil", "is-finite",
+                      "broadcast", "parameter", "constant", "bitcast",
+                      "get-tuple-element", "tuple", "iota", "reshape",
+                      "round-nearest-afz", "exponential-minus-one"})
+
+    def _elementwise_only(self, comp: str) -> bool:
+        return all(ins.opcode in self._EW_FUSABLE
+                   for ins in self.computations.get(comp, []))
+
+    def _resolve_passthrough(self, syms: Dict[str, Instr],
+                             name: str) -> Optional[Instr]:
+        seen = 0
+        ins = syms.get(name)
+        while (ins is not None and ins.opcode in self._PASSTHROUGH
+               and ins.operands and seen < 8):
+            ins = syms.get(ins.operands[0])
+            seen += 1
+        return ins
+
+    def _operand_bytes_resolved(self, comp: str, ins: Instr) -> int:
+        """Operand bytes with converts resolved to their source dtype and
+        pred (mask) operands skipped — on TPU masks are fused iota-compares
+        that never round-trip HBM. Float operands are charged at
+        bf16-equivalent width (the activation policy: f32 transients produced
+        inside CPU fusions would cross HBM as bf16 on the TPU build)."""
+        syms = self.symbols[comp]
+        total = 0
+        for nm in dict.fromkeys(ins.operands):  # dedupe, keep order
+            direct = syms.get(nm)
+            if direct is None:
+                continue
+            if direct.result.startswith("pred["):
+                continue
+            src = self._resolve_passthrough(syms, nm)
+            cand = [_bf16_equiv_bytes(direct.result)]
+            if src is not None:
+                cand.append(_bf16_equiv_bytes(src.result))
+            total += min(cand)
+        return total
+
+    def _fusion_operand_bytes(self, comp: str, ins: Instr,
+                              called: Optional[str]) -> int:
+        """Fusion operand bytes with dynamic-slice-aware accounting: an
+        operand whose only in-fusion uses are dynamic-slices is charged the
+        slice sizes, not the whole buffer (scan-stacked caches/weights are
+        read one layer at a time)."""
+        syms = self.symbols[comp]
+        fsyms = self.symbols.get(called or "", {})
+        finstrs = self.computations.get(called or "", [])
+        param_by_idx: Dict[int, str] = {}
+        for fi in finstrs:
+            if fi.opcode == "parameter":
+                mm = re.search(r"parameter\((\d+)\)", fi.line)
+                if mm:
+                    param_by_idx[int(mm.group(1))] = fi.name
+        consumers: Dict[str, List[Instr]] = {}
+        for fi in finstrs:
+            for nm in fi.operands:
+                consumers.setdefault(nm, []).append(fi)
+
+        def slice_only_bytes(pname: str) -> Optional[int]:
+            """If every (transitively pass-through) use of the parameter is a
+            dynamic-slice, return the total slice bytes; else None."""
+            total, stack = 0, [pname]
+            seen = set()
+            while stack:
+                nm = stack.pop()
+                if nm in seen:
+                    continue
+                seen.add(nm)
+                for use in consumers.get(nm, []):
+                    if use.opcode == "dynamic-slice":
+                        total += _bf16_equiv_bytes(use.result)
+                    elif use.opcode in self._PASSTHROUGH:
+                        stack.append(use.name)
+                    else:
+                        return None
+            return total
+
+        charged = 0
+        seen_names = set()
+        for i, nm in enumerate(ins.operands):
+            if nm in seen_names:
+                continue
+            seen_names.add(nm)
+            direct = syms.get(nm)
+            if direct is None or direct.result.startswith("pred["):
+                continue
+            src = self._resolve_passthrough(syms, nm)
+            base = min([_bf16_equiv_bytes(direct.result)]
+                       + ([_bf16_equiv_bytes(src.result)]
+                          if src is not None else []))
+            pname = param_by_idx.get(i)
+            if pname is not None:
+                sb = slice_only_bytes(pname)
+                if sb is not None:
+                    charged += min(sb, base)
+                    continue
+            charged += base
+        return charged
+
+    def _operand_elems(self, comp: str, ins: Instr,
+                       indices: List[int]) -> int:
+        syms = self.symbols[comp]
+        total = 0
+        for i in indices:
+            if i < len(ins.operands):
+                src = syms.get(ins.operands[i])
+                if src is not None:
+                    total += _text_elems(src.result)
+        return total
+
+
+def analyze_hlo(hlo_text: str) -> CostTotals:
+    return HloCostModel(hlo_text).analyze()

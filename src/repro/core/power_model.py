@@ -1,0 +1,134 @@
+"""Analytic power/performance model for a chip under DVFS & power caps.
+
+The paper measures (MI250X) how power, runtime and energy respond to
+frequency/power caps at each roofline position. On TPU no public Table III
+exists, so we model it from first principles and calibrate the endpoints to
+the paper's qualitative findings:
+
+* runtime: t(f) = max(t_compute * f_nom/f, t_memory, t_collective) — compute
+  scales with clock, HBM/ICI do not (paper Fig. 6: memory-bound runtime is
+  frequency-insensitive until very low caps);
+* power:   P(f) = P_idle + span * (w_c * u_c * (f/f_nom)^gamma
+                                   + w_m * u_m + w_n * u_n), capped at TDP.
+  With w_c + w_m > 1, TDP is reached only when MXU *and* HBM are both busy —
+  exactly the paper's AI=4 peak (Fig. 4);
+* a power cap is enforced RAPL-style: the highest frequency whose predicted
+  power is below the cap (paper: "a power limit only affects codes
+  surpassing the limit, while a set frequency affects all").
+
+Calibration to the paper's MI250X data: memory-only stress draws
+(380-89)/(560-89) = 0.62 of the dynamic span -> w_m = 0.62; compute-only
+(430-89)/(560-89) = 0.72 -> w_c = 0.72; w_c + w_m = 1.34 > 1 with the TDP
+cap reproduces the observed plateau.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+from repro.core.hardware import ChipSpec, MODES, TPU_V5E, Mode
+
+W_COMPUTE = 0.72
+W_MEMORY = 0.62
+W_NETWORK = 0.25
+GAMMA = 2.4          # V^2*f with limited voltage range: f^2..f^3
+
+
+@dataclass(frozen=True)
+class StepProfile:
+    """Roofline position of one step (seconds at nominal frequency)."""
+    compute_s: float
+    memory_s: float
+    collective_s: float = 0.0
+
+    @property
+    def total_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s, 1e-12)
+
+
+def step_time(profile: StepProfile, freq_frac: float) -> float:
+    return max(profile.compute_s / max(freq_frac, 1e-6),
+               profile.memory_s, profile.collective_s, 1e-12)
+
+
+def utilizations(profile: StepProfile, freq_frac: float
+                 ) -> Tuple[float, float, float]:
+    t = step_time(profile, freq_frac)
+    return (profile.compute_s / max(freq_frac, 1e-6) / t,
+            profile.memory_s / t,
+            profile.collective_s / t)
+
+
+def power_w(profile: StepProfile, freq_frac: float,
+            chip: ChipSpec = TPU_V5E) -> float:
+    u_c, u_m, u_n = utilizations(profile, freq_frac)
+    span = chip.tdp_w - chip.idle_w
+    p = chip.idle_w + span * (W_COMPUTE * u_c * freq_frac ** GAMMA
+                              + W_MEMORY * u_m + W_NETWORK * u_n)
+    return min(p, chip.tdp_w)
+
+
+def energy_j(profile: StepProfile, freq_frac: float,
+             chip: ChipSpec = TPU_V5E) -> float:
+    return power_w(profile, freq_frac, chip) * step_time(profile, freq_frac)
+
+
+def freq_for_power_cap(profile: StepProfile, cap_w: float,
+                       chip: ChipSpec = TPU_V5E,
+                       grid: int = 64) -> float:
+    """RAPL-style enforcement: highest frequency with predicted power <= cap."""
+    lo = chip.f_min_mhz / chip.f_nominal_mhz
+    best = lo
+    for i in range(grid + 1):
+        f = lo + (1.0 - lo) * i / grid
+        if power_w(profile, f, chip) <= cap_w:
+            best = max(best, f)
+    return best
+
+
+def classify_mode(profile: StepProfile, chip: ChipSpec = TPU_V5E,
+                  freq_frac: float = 1.0) -> Mode:
+    """Structural mode classification from the roofline profile. The paper
+    must *infer* the mode from power alone (power-only telemetry); sitting
+    above the compiler we know the roofline terms exactly — the inverse
+    inference lives in :func:`classify_mode_from_power` for fleet telemetry.
+    """
+    u_c, u_m, u_n = utilizations(profile, freq_frac)
+    if u_n >= max(u_c, u_m):
+        return MODES[0]                       # network/latency bound
+    if u_m >= u_c:
+        return MODES[1]                       # memory intensive
+    return MODES[2]                           # compute intensive
+
+
+def classify_mode_from_power(p_w: float, chip: ChipSpec = TPU_V5E) -> Mode:
+    """Paper-faithful power-band inference, MI250X bands rescaled to the
+    chip's (idle, TDP) envelope (Table IV)."""
+    frac = (p_w - chip.idle_w) / (chip.tdp_w - chip.idle_w)
+    # paper bands on MI250X: <=200 / 200-420 / 420-560 / >560 W
+    b1 = (200.0 - 89.0) / (560.0 - 89.0)   # 0.236
+    b2 = (420.0 - 89.0) / (560.0 - 89.0)   # 0.703
+    if frac <= b1:
+        return MODES[0]
+    if frac <= b2:
+        return MODES[1]
+    if frac <= 1.0 - 1e-9:
+        return MODES[2]
+    return MODES[3]
+
+
+def profile_from_roofline(compute_s: float, memory_s: float,
+                          collective_s: float = 0.0) -> StepProfile:
+    return StepProfile(compute_s, memory_s, collective_s)
+
+
+def vai_profile(ai: float, n_elems: int, loopsize: int,
+                chip: ChipSpec = TPU_V5E, itemsize: int = 4) -> StepProfile:
+    """Roofline position of one VAI pass (paper Algorithm 1)."""
+    flops = 2.0 * loopsize * n_elems
+    byts = (4 if loopsize else 2) * n_elems * itemsize
+    # VAI is a VPU (vector) workload, not MXU: peak vector flops ~= peak/8
+    vector_peak = chip.peak_flops / 8.0
+    return StepProfile(compute_s=flops / vector_peak,
+                       memory_s=byts / chip.hbm_bw)

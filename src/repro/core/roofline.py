@@ -1,0 +1,185 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+``cost_analysis`` supplies FLOPs and HBM bytes; collective traffic is NOT in
+cost_analysis, so we parse the partitioned HLO text and sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (and their async -start forms).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.core.hardware import ChipSpec, TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^=]*?\)\s*)?[a-z0-9_\[\]{},\. ]*?"
+    r"\b(" + "|".join(COLLECTIVE_OPS) + r")(-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = _DTYPE_BYTES.get(dtype)
+    if n is None:
+        return 0  # token/opaque types
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-type operand bytes in the (per-device) partitioned module."""
+    out: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    counts: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async completion: operands already counted at -start
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        operands = line[m.end():]
+        total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(operands))
+        out[op] += total
+        counts[op] += 1
+    out = {k: v for k, v in out.items() if counts.get(k)}
+    out["__counts__"] = {k: v for k, v in counts.items() if v}  # type: ignore
+    out["total"] = sum(v for k, v in out.items()
+                       if k not in ("__counts__", "total"))
+    return out
+
+
+@dataclass
+class RooflineReport:
+    """All three terms in *seconds per step*, per-chip basis."""
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    model_flops_global: float
+    chips: int
+    chip: str = TPU_V5E.name
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline (perfect-overlap) step time estimate."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / compiled HLO flops — catches remat/padding waste."""
+        hlo_global = self.flops_per_dev * self.chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-flops utilization at the roofline step time."""
+        denom = self.step_time_s * self.chips * TPU_V5E.peak_flops
+        return self.model_flops_global / denom if denom else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "flops_per_dev": self.flops_per_dev,
+            "bytes_per_dev": self.bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "model_flops_global": self.model_flops_global,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu": self.mfu, "chips": self.chips,
+        }
+
+
+def roofline_from_artifacts(cost: Dict, coll: Dict, chips: int,
+                            model_flops_global: float,
+                            chip: ChipSpec = TPU_V5E) -> RooflineReport:
+    """``cost``/``coll`` are measured on the PER-DEVICE partitioned module
+    (that is what ``compiled.cost_analysis()`` / ``compiled.as_text()``
+    describe after SPMD partitioning)."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(coll.get("total", 0))
+    return RooflineReport(
+        compute_s=flops / chip.peak_flops,
+        memory_s=byts / chip.hbm_bw,
+        collective_s=cbytes / chip.ici_bw,
+        flops_per_dev=flops, bytes_per_dev=byts,
+        coll_bytes_per_dev=cbytes,
+        model_flops_global=model_flops_global,
+        chips=chips, chip=chip.name)
+
+
+def memory_floor_s(cfg, shape, chips: int, chip: ChipSpec = TPU_V5E) -> float:
+    """Idealized-TPU-fusion lower bound on the memory term: weight passes +
+    residual-stream activation traffic + optimizer/cache state. The parsed
+    HLO bytes (upper bound) and this floor bracket the real memory term."""
+    n_total = cfg.param_count()
+    n_active = cfg.param_count(active_only=True)
+    d = cfg.d_model
+    L = cfg.n_layers + cfg.n_encoder_layers
+    param_dev = n_total * 2 / chips                      # bf16, fully sharded
+    if shape.kind == "train":
+        tokens_dev = shape.global_batch * shape.seq_len / chips * \
+            (16 if chips >= 256 else 1)                  # batch over data only
+        act = 32 * L * tokens_dev * d * 2                # fwd+remat+bwd, bf16
+        opt = n_total * 8 / chips * 3                    # m,v f32 r/w + grad
+        return (3 * param_dev + opt + act) / chip.hbm_bw
+    if shape.kind == "prefill":
+        tokens_dev = shape.global_batch * shape.seq_len / chips * \
+            (16 if chips >= 256 else 1)
+        act = 10 * L * tokens_dev * d * 2
+        return (param_dev + act) / chip.hbm_bw
+    # decode: weights once + KV/state cache once
+    active_dev = n_active * 2 / chips
+    cache = 0.0
+    if cfg.use_mla:
+        cache = (shape.global_batch * shape.seq_len
+                 * (cfg.kv_lora_rank + cfg.qk_rope_dim) * cfg.n_layers * 2)
+    elif cfg.family in ("dense", "moe", "vlm", "encdec"):
+        hd = cfg.resolved_head_dim
+        cache = (shape.global_batch * shape.seq_len * cfg.n_kv_heads * hd
+                 * 2 * cfg.n_layers * 2)
+    elif cfg.family == "hybrid":
+        cache = (shape.global_batch * min(cfg.local_window, shape.seq_len)
+                 * cfg.n_kv_heads * cfg.resolved_head_dim * 2
+                 * cfg.n_layers // 3 * 2)
+    elif cfg.family == "ssm":
+        d_in = cfg.ssm_expand * d
+        cache = shape.global_batch * d_in * cfg.ssm_state * 4 * cfg.n_layers
+    return (active_dev + cache / chips) / chip.hbm_bw
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode counts one
+    token per sequence."""
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: forward-only, 1 token

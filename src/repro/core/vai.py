@@ -1,0 +1,113 @@
+"""VAI sweep driver (paper §IV-A, Figs. 4/5) — runs the Pallas VAI kernel
+across arithmetic intensities under every frequency and power cap, recording
+runtime / power / energy via the calibrated power model (the Frontier rails
+are replaced by :mod:`repro.core.power_model` on this container; on real
+hardware the same driver reads the platform's power channel).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_vai import VAISuiteConfig
+from repro.core import power_model as pm
+from repro.core.hardware import ChipSpec, TPU_V5E
+from repro.kernels import ops as kops
+from repro.kernels import vai as vai_kernel
+
+
+@dataclass
+class VAIPoint:
+    ai: float                 # flops/byte
+    loopsize: int
+    freq_mhz: int
+    power_cap_w: Optional[float]
+    tflops: float
+    gbytes_s: float
+    power_w: float
+    time_rel: float           # runtime normalized to the uncapped run
+    energy_rel: float
+
+    def to_dict(self) -> Dict:
+        return self.__dict__.copy()
+
+
+def _loopsize_for(ai: float, itemsize: int = 4) -> int:
+    # AI = 2L / (4 accesses * itemsize)  ->  L = AI * 2 * itemsize
+    return int(round(ai * 2 * itemsize))
+
+
+def run_sweep(cfg: VAISuiteConfig = VAISuiteConfig(),
+              chip: ChipSpec = TPU_V5E,
+              execute_kernel: bool = True) -> List[VAIPoint]:
+    """Full (AI x frequency) and (AI x power-cap) sweep. ``execute_kernel``
+    actually runs the Pallas kernel (interpret mode on CPU) for a subset of
+    elements to validate numerics; the (time, power) surface comes from the
+    calibrated model."""
+    points: List[VAIPoint] = []
+    rows = max(cfg.elements // vai_kernel.LANE, vai_kernel.LANE)
+    key = jax.random.PRNGKey(0)
+    a = jnp.full((rows, vai_kernel.LANE), 1.3, jnp.float32)
+    b = jnp.arange(rows * vai_kernel.LANE, dtype=jnp.float32).reshape(
+        rows, vai_kernel.LANE) % 7.0
+    c = jnp.full((rows, vai_kernel.LANE), 1.3, jnp.float32)
+
+    for ai in cfg.intensities:
+        L = _loopsize_for(ai)
+        if execute_kernel and L <= 64:   # CPU-interpret budget
+            out = kops.vai_op(a, b, c, loopsize=L)
+            out.block_until_ready()
+        profile = pm.vai_profile(ai, cfg.elements, L, chip)
+        t0 = pm.step_time(profile, 1.0)
+        e0 = pm.energy_j(profile, 1.0, chip)
+        flops, byts = vai_kernel.vai_flops_bytes(cfg.elements, L)
+
+        for f_mhz in cfg.frequencies_mhz:
+            frac = f_mhz / chip.f_nominal_mhz * (
+                chip.f_nominal_mhz / 1700)   # grid defined on 1700 nominal
+            frac = min(max(frac, chip.f_min_mhz / chip.f_nominal_mhz), 1.0)
+            t = pm.step_time(profile, frac)
+            p = pm.power_w(profile, frac, chip)
+            points.append(VAIPoint(
+                ai=ai, loopsize=L, freq_mhz=f_mhz, power_cap_w=None,
+                tflops=flops / t / 1e12, gbytes_s=byts / t / 1e9,
+                power_w=p, time_rel=t / t0, energy_rel=p * t / e0))
+
+        for cap_frac in (1.0, 0.9, 0.72, 0.54, 0.36, 0.25, 0.18):
+            cap_w = cap_frac * chip.tdp_w
+            frac = pm.freq_for_power_cap(profile, cap_w, chip)
+            t = pm.step_time(profile, frac)
+            p = pm.power_w(profile, frac, chip)
+            points.append(VAIPoint(
+                ai=ai, loopsize=L, freq_mhz=int(frac * chip.f_nominal_mhz),
+                power_cap_w=cap_w,
+                tflops=flops / t / 1e12, gbytes_s=byts / t / 1e9,
+                power_w=p, time_rel=t / t0, energy_rel=p * t / e0))
+    return points
+
+
+def response_table(points: List[VAIPoint], by: str = "freq"
+                   ) -> Dict[float, Dict[str, float]]:
+    """Average over arithmetic intensities -> the paper's Table III format:
+    cap -> (power %, runtime %, energy %)."""
+    groups: Dict[float, List[VAIPoint]] = {}
+    for p in points:
+        if by == "freq" and p.power_cap_w is None:
+            groups.setdefault(p.freq_mhz, []).append(p)
+        elif by == "power" and p.power_cap_w is not None:
+            groups.setdefault(round(p.power_cap_w, 1), []).append(p)
+    base_key = max(groups)
+    base_power = np.mean([p.power_w for p in groups[base_key]])
+    out = {}
+    for cap, ps in sorted(groups.items(), reverse=True):
+        out[cap] = {
+            "power_pct": 100.0 * float(np.mean([p.power_w for p in ps])) / base_power,
+            "runtime_pct": 100.0 * float(np.mean([p.time_rel for p in ps])),
+            "energy_pct": 100.0 * float(np.mean([p.energy_rel for p in ps])),
+        }
+    return out

@@ -1,0 +1,45 @@
+"""Memory-subsystem bandwidth probe (paper §III-B-b, GPU-benches L2 kernel,
+TPU-adapted).
+
+The paper's kernel loads the same memory chunk from many blocks to measure
+L2-vs-HBM bandwidth as a function of the chunk size. On TPU the analogue
+boundary is VMEM: the grid re-reads chunk ``i % n_chunks`` via the BlockSpec
+index map, so a small working set stays VMEM/cache-resident while a large
+one streams from HBM. Each grid step reduces its chunk to a single lane row
+(bandwidth-bound by construction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _membw_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.sum(x_ref[...], axis=0, keepdims=True)
+
+
+def membw(x: jax.Array, *, n_chunks: int, n_iters: int,
+          interpret: bool | None = None) -> jax.Array:
+    """x: [n_chunks * chunk_rows, 128] f32. Returns per-iteration chunk sums
+    [n_iters, 128]; iteration i reads chunk (i % n_chunks)."""
+    rows = x.shape[0]
+    assert rows % n_chunks == 0, (rows, n_chunks)
+    chunk_rows = rows // n_chunks
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return pl.pallas_call(
+        _membw_kernel,
+        grid=(n_iters,),
+        in_specs=[pl.BlockSpec((chunk_rows, LANE),
+                               lambda i: (i % n_chunks, 0))],
+        out_specs=pl.BlockSpec((1, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_iters, LANE), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def membw_bytes(chunk_bytes: int, n_iters: int) -> int:
+    return chunk_bytes * n_iters

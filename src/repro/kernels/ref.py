@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vai_ref(a: jax.Array, b: jax.Array, c: jax.Array,
+            loopsize: int) -> jax.Array:
+    """z <- a*b + z repeated ``loopsize`` times == c + loopsize * a*b;
+    loopsize 0 is the stream copy c <- b."""
+    if loopsize == 0:
+        return b
+    return c + jnp.float32(loopsize) * (a * b)
+
+
+def membw_ref(x: jax.Array, n_chunks: int, n_iters: int) -> jax.Array:
+    rows = x.shape[0] // n_chunks
+    chunks = x.reshape(n_chunks, rows, x.shape[1]).sum(axis=1)
+    idx = jnp.arange(n_iters) % n_chunks
+    return chunks[idx]
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True,
+                  scale: float | None = None) -> jax.Array:
+    """q: [BH, Sq, D]; naive softmax attention, f32 math."""
+    BH, Sq, D = q.shape
+    _, Skv, _ = k.shape
+    scale = D ** -0.5 if scale is None else scale
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(Skv)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(v.dtype)

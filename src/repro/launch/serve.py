@@ -1,0 +1,65 @@
+"""Serving driver: batched generation with energy telemetry + governor.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
+        --reduced --batch 4 --new-tokens 16 --governor
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.governor import GovernorConfig, PowerGovernor
+from repro.core.telemetry import TelemetryStore
+from repro.models import model as model_mod
+from repro.models.transformer import Runtime
+from repro.serving import Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--governor", action="store_true")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = dataclasses.replace(cfg.reduced(), dtype="float32")
+    rt = Runtime(tp=1, moe_impl="local")
+    params, _ = model_mod.init_params(cfg, rt, jax.random.PRNGKey(0))
+
+    telemetry = TelemetryStore()
+    governor = PowerGovernor(GovernorConfig()) if args.governor else None
+    engine = ServeEngine(cfg, rt, params, max_len=args.max_len,
+                         governor=governor, telemetry=telemetry)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, args.prompt_len,
+                                        dtype=np.int32),
+                    max_new_tokens=args.new_tokens)
+            for _ in range(args.batch)]
+    extra = None
+    if cfg.frontend_seq:
+        extra = {"frontend": jnp.asarray(
+            rng.standard_normal((args.batch, cfg.frontend_seq,
+                                 cfg.d_model)) * 0.02,
+            jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16)}
+    outs = engine.generate(reqs, temperature=args.temperature,
+                           extra_batch=extra)
+    for i, o in enumerate(outs[: min(4, len(outs))]):
+        print(f"req{i}: {o.tolist()}")
+    print(f"energy {telemetry.total_energy_j():.1f} J  "
+          f"mode-hours {telemetry.mode_hours_pct()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+"""Step builders (train / prefill / decode) and abstract input specs for the
+multi-pod dry-run. Everything here is mesh-agnostic: shapes and shardings
+come in via ``Runtime`` + ``ShardingRules``."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import decode as decode_mod
+from repro.models import model as model_mod
+from repro.models.common import ShardingRules, default_rules, sharding_ctx
+from repro.models.transformer import Runtime
+from repro.optim import OptConfig, apply_updates, init_opt_state, opt_state_specs
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, rt: Runtime, opt_cfg: OptConfig,
+                    rules: Optional[ShardingRules] = None) -> Callable:
+    rules = rules or default_rules()
+
+    def train_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        with sharding_ctx(rules if rt.mesh is not None else None, rt.mesh):
+            def lfn(params):
+                return model_mod.loss_fn(cfg, rt, params, batch)
+
+            (loss, metrics), grads = jax.value_and_grad(
+                lfn, has_aux=True)(state["params"])
+            new_state_extra = {}
+            if opt_cfg.grad_compression == "int8":
+                from repro.optim.compression import compress_grads
+                grads, new_err = compress_grads(grads, state["grad_error"])
+                new_state_extra["grad_error"] = new_err
+            new_params, new_opt, om = apply_updates(
+                state["params"], grads, state["opt"], opt_cfg)
+        return ({"params": new_params, "opt": new_opt, **new_state_extra},
+                {**metrics, **om})
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rt: Runtime, max_len: int,
+                      rules: Optional[ShardingRules] = None) -> Callable:
+    rules = rules or default_rules()
+
+    def prefill_step(params: Dict, batch: Dict) -> Tuple[jax.Array, Dict]:
+        with sharding_ctx(rules if rt.mesh is not None else None, rt.mesh):
+            return decode_mod.prefill(cfg, rt, params, batch, max_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, rt: Runtime,
+                     rules: Optional[ShardingRules] = None) -> Callable:
+    rules = rules or default_rules()
+
+    def serve_step(params: Dict, token: jax.Array, pos: jax.Array,
+                   state: Dict) -> Tuple[jax.Array, Dict]:
+        with sharding_ctx(rules if rt.mesh is not None else None, rt.mesh):
+            return decode_mod.decode_step(cfg, rt, params, token, pos, state)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract specs (ShapeDtypeStruct + NamedSharding stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+def _ns(mesh: Optional[Mesh], spec: P):
+    return None if mesh is None else NamedSharding(mesh, spec)
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=_ns(mesh, spec))
+
+
+def rules_for_shape(shape: ShapeConfig, multi_pod: bool,
+                    mesh: Optional[Mesh]) -> ShardingRules:
+    """Batch sharding degrades gracefully when global_batch doesn't divide
+    the data axes (e.g. long_500k with batch 1 -> replicated batch)."""
+    rules = default_rules(multi_pod)
+    if mesh is not None:
+        import math
+        dp = math.prod(mesh.shape[a] for a in
+                       (("pod", "data") if multi_pod else ("data",)))
+        if shape.global_batch % dp:
+            d = dict(rules.rules)
+            d["batch"] = None
+            rules = ShardingRules(rules=d)
+    return rules
+
+
+def abstract_params(cfg: ModelConfig, rt: Runtime, mesh: Optional[Mesh],
+                    rules: ShardingRules):
+    """(ShapeDtypeStruct tree with shardings, spec tree)."""
+    shapes = jax.eval_shape(
+        lambda k: model_mod.init_params(cfg, rt, k, rules=rules)[0],
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = model_mod.param_specs(cfg, rt, rules=rules)
+    structs = jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return structs, specs
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh],
+                rules: ShardingRules, kind: str) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    bspec = rules.mesh_axes(["batch"])
+    b3 = rules.mesh_axes(["batch", None, None])
+    tok_len = S + 1 if kind == "train" else S
+    out = {"tokens": _sds((B, tok_len), jnp.int32, mesh,
+                          rules.mesh_axes(["batch", None]))}
+    if cfg.frontend_seq:
+        out["frontend"] = _sds((B, cfg.frontend_seq, cfg.d_model),
+                               jnp.bfloat16 if cfg.dtype == "bfloat16"
+                               else jnp.float32, mesh, b3)
+    return out
+
+
+def abstract_state(cfg: ModelConfig, rt: Runtime, mesh: Optional[Mesh],
+                   rules: ShardingRules, zero1: bool = True,
+                   moment_dtype: str = "float32"):
+    """Training state (params + AdamW moments) as abstract structs."""
+    from repro.parallel.sharding import zero1_specs
+    p_structs, p_specs = abstract_params(cfg, rt, mesh, rules)
+    m_specs = p_specs
+    if zero1 and mesh is not None:
+        batch_axes = (("pod", "data") if "pod" in mesh.axis_names
+                      else ("data",))
+        m_specs = zero1_specs(p_specs, p_structs, mesh, batch_axes)
+    mdt = jnp.bfloat16 if moment_dtype == "bfloat16" else jnp.float32
+    mom = jax.tree.map(
+        lambda s, sp: _sds(s.shape, mdt, mesh, sp),
+        p_structs, m_specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    opt = {"m": mom, "v": mom, "step": _sds((), jnp.int32, mesh, P())}
+    return {"params": p_structs, "opt": opt}
+
+
+def abstract_decode_state(cfg: ModelConfig, rt: Runtime, batch: int,
+                          max_len: int, mesh: Optional[Mesh],
+                          rules: ShardingRules):
+    shapes = jax.eval_shape(
+        lambda: decode_mod.init_decode_state(cfg, rt, batch, max_len))
+    specs = decode_mod.decode_state_specs(cfg, rt, batch, max_len,
+                                          rules=rules)
+    return jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, rt: Runtime,
+                mesh: Optional[Mesh] = None,
+                rules: Optional[ShardingRules] = None,
+                zero1: bool = True,
+                moment_dtype: str = "float32") -> Tuple[Tuple, Dict]:
+    """Abstract arguments for the step implied by ``shape.kind``:
+
+    * train   -> (state, batch)
+    * prefill -> (params, batch)
+    * decode  -> (params, token, pos, decode_state)
+    """
+    rules = rules or default_rules()
+    if shape.kind == "train":
+        state = abstract_state(cfg, rt, mesh, rules, zero1=zero1,
+                               moment_dtype=moment_dtype)
+        return (state, batch_specs(cfg, shape, mesh, rules, "train")), {}
+    if shape.kind == "prefill":
+        params, _ = abstract_params(cfg, rt, mesh, rules)
+        return (params, batch_specs(cfg, shape, mesh, rules, "prefill")), {}
+    if shape.kind == "decode":
+        params, _ = abstract_params(cfg, rt, mesh, rules)
+        B, S = shape.global_batch, shape.seq_len
+        token = _sds((B, 1), jnp.int32, mesh, rules.mesh_axes(["batch", None]))
+        pos = _sds((), jnp.int32, mesh, P())
+        state = abstract_decode_state(cfg, rt, B, S, mesh, rules)
+        return (params, token, pos, state), {}
+    raise ValueError(shape.kind)

@@ -1,0 +1,2 @@
+from repro.models.transformer import Runtime  # noqa: F401
+from repro.models import model, decode  # noqa: F401

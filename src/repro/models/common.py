@@ -1,0 +1,184 @@
+"""Shared model plumbing: logical-axis sharding, parameter factory, norms,
+rotary embeddings, gated MLP.
+
+Sharding is expressed against *logical* axes ("batch", "heads", "ffn",
+"experts", "vocab", "seq", ...). A :class:`ShardingRules` object maps logical
+axes to mesh axes; model code calls :func:`shard` which becomes a no-op when no
+rules are installed (single-device smoke tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Logical-axis -> mesh-axis mapping."""
+    rules: Mapping[str, AxisName]
+
+    def mesh_axes(self, logical: Sequence[Optional[str]]) -> P:
+        return P(*[self.rules.get(ax) if ax else None for ax in logical])
+
+
+# Default production mapping (DESIGN.md §3.1). "batch" covers (pod, data)
+# when the pod axis exists; launch code installs the right variant.
+def default_rules(multi_pod: bool = False) -> ShardingRules:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return ShardingRules(rules={
+        "batch": batch,
+        "seq": None,           # sequence unsharded at baseline (SP in §Perf)
+        "seq_moe": "model",    # token axis sharded over model pre-MoE-dispatch
+        "heads": "model",
+        "kv_heads": "model",
+        "ffn": "model",
+        "experts": "model",
+        "vocab": "model",
+        "dmodel": None,
+        "lru": "model",
+        "state": None,
+        "kv_seq": "model",     # decode-cache sequence sharding (§Perf)
+        "expert_ff": None,     # 2D expert sharding for serving (§Perf)
+    })
+
+
+class _Ctx(threading.local):
+    rules: Optional[ShardingRules] = None
+    mesh: Optional[jax.sharding.Mesh] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_ctx(rules: Optional[ShardingRules],
+                 mesh: Optional[jax.sharding.Mesh] = None):
+    prev_r, prev_m = _CTX.rules, _CTX.mesh
+    _CTX.rules, _CTX.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _CTX.rules, _CTX.mesh = prev_r, prev_m
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return _CTX.rules
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain ``x`` to the sharding implied by per-dim logical axes.
+    No-op outside a sharding context."""
+    rules = _CTX.rules
+    if rules is None:
+        return x
+    spec = rules.mesh_axes(list(logical) + [None] * (x.ndim - len(logical)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Parameter factory: one init pass produces arrays, another produces
+# PartitionSpecs — identical tree structure by construction.
+# ---------------------------------------------------------------------------
+class ParamMaker:
+    """``mk(name, shape, logical_axes, scale)`` leaf constructor."""
+
+    def __init__(self, key: Optional[jax.Array], dtype: str,
+                 spec_mode: bool = False,
+                 rules: Optional[ShardingRules] = None):
+        self._key = key
+        self._dtype = dtype
+        self._spec_mode = spec_mode
+        self._rules = rules or default_rules()
+        self._count = 0
+
+    def __call__(self, name: str, shape: Tuple[int, ...],
+                 axes: Tuple[Optional[str], ...],
+                 scale: Optional[float] = None,
+                 init: str = "normal") -> Union[jax.Array, P]:
+        assert len(shape) == len(axes), (name, shape, axes)
+        if self._spec_mode:
+            return self._rules.mesh_axes(axes)
+        self._count += 1
+        key = jax.random.fold_in(self._key, self._count)
+        if init == "zeros":
+            return jnp.zeros(shape, self._dtype)
+        if init == "ones":
+            return jnp.ones(shape, self._dtype)
+        if scale is None:
+            scale = shape[0] ** -0.5 if len(shape) > 1 else 0.02
+        x = jax.random.normal(key, shape, jnp.float32) * scale
+        return x.astype(self._dtype)
+
+
+def init_param_tree(build: Callable[[ParamMaker], Dict],
+                    key: jax.Array, dtype: str,
+                    rules: Optional[ShardingRules] = None):
+    """Run ``build`` twice: once for arrays, once for PartitionSpecs."""
+    params = build(ParamMaker(key, dtype, spec_mode=False, rules=rules))
+    specs = build(ParamMaker(None, dtype, spec_mode=True, rules=rules))
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# Norms / rotary / MLP
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Half-rotation RoPE. x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(ang)[..., :, None, :]                 # [..., seq, 1, hd/2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def gated_mlp_params(mk: ParamMaker, prefix: str, d: int, ff: int,
+                     d_axis: str = "dmodel", ff_axis: str = "ffn") -> Dict:
+    return {
+        "wi": mk(f"{prefix}.wi", (d, ff), (d_axis, ff_axis)),
+        "wg": mk(f"{prefix}.wg", (d, ff), (d_axis, ff_axis)),
+        "wo": mk(f"{prefix}.wo", (ff, d), (ff_axis, d_axis)),
+    }
+
+
+def gated_mlp(p: Dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    a = jnp.einsum("...d,df->...f", x, p["wi"])
+    g = jnp.einsum("...d,df->...f", x, p["wg"])
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    h = shard(a * g, "batch", None, "ffn") if a.ndim == 3 else a * g
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  vocab_size: int) -> jax.Array:
+    """Mean CE over valid labels (label = -1 masks; padded vocab excluded by
+    construction because labels never index the pad region)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

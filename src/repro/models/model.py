@@ -1,0 +1,212 @@
+"""Top-level model API, uniform across the ten architectures.
+
+    params, specs = init_params(cfg, rt, key)
+    loss, metrics = loss_fn(cfg, rt, params, batch)          # training
+    state         = init_decode_state(cfg, rt, B, max_len)   # serving
+    logits, state = prefill(cfg, rt, params, batch, state)
+    logits, state = decode_step(cfg, rt, params, token, pos, state)
+
+``batch`` is a dict: tokens [B, S+1] int32 (train) / [B, S] (prefill), plus
+"frontend" (precomputed patch/frame embeddings) for vlm/encdec stubs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models.common import (ParamMaker, cross_entropy, gated_mlp,
+                                 init_param_tree, rms_norm, shard,
+                                 default_rules)
+from repro.models.transformer import Runtime, StackedMaker
+
+CE_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def _build(mk: ParamMaker, cfg: ModelConfig, rt: Runtime) -> Dict:
+    V = cfg.padded_vocab(rt.tp)
+    d = cfg.d_model
+    p: Dict[str, Any] = {
+        "emb": mk("emb", (V, d), ("vocab", "dmodel"), scale=0.02),
+        "ln_f": mk("ln_f", (d,), (None,), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        p["unemb"] = mk("unemb", (d, V), ("dmodel", "vocab"), scale=d ** -0.5)
+
+    if cfg.family in ("dense", "moe"):
+        p["layers"] = tfm.trunk_params(mk, cfg, rt, cfg.n_layers, "decoder")
+        if cfg.mtp_depth:
+            p["mtp"] = {
+                "ln_h": mk("mtp.ln_h", (d,), (None,), init="ones"),
+                "ln_e": mk("mtp.ln_e", (d,), (None,), init="ones"),
+                "w_proj": mk("mtp.w_proj", (2 * d, d), (None, "dmodel")),
+                "block": tfm.decoder_layer_params(mk, cfg, rt),
+            }
+    elif cfg.family == "ssm":
+        p["layers"] = tfm.trunk_params(mk, cfg, rt, cfg.n_layers, "ssm")
+    elif cfg.family == "hybrid":
+        p["layers"] = tfm.hybrid_params(mk, cfg, rt)
+    elif cfg.family == "vlm":
+        p["layers"] = tfm.vlm_params(mk, cfg, rt)
+    elif cfg.family == "encdec":
+        enc_mk = StackedMaker(mk, cfg.n_encoder_layers)
+        dec_mk = StackedMaker(mk, cfg.n_layers)
+        p["encoder"] = tfm.encoder_layer_params(enc_mk, cfg, rt)
+        p["layers"] = tfm.decoder_layer_params(dec_mk, cfg, rt, cross=True)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def init_params(cfg: ModelConfig, rt: Runtime, key: jax.Array,
+                rules=None) -> Tuple[Dict, Dict]:
+    build = functools.partial(_build, cfg=cfg, rt=rt)
+    return init_param_tree(lambda mk: build(mk), key, cfg.dtype, rules=rules)
+
+
+def param_specs(cfg: ModelConfig, rt: Runtime, rules=None) -> Dict:
+    build = functools.partial(_build, cfg=cfg, rt=rt)
+    mk = ParamMaker(None, cfg.dtype, spec_mode=True,
+                    rules=rules or default_rules())
+    return build(mk)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def embed(p: Dict, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(p["emb"], tokens, axis=0)
+    if cfg.family == "hybrid":  # gemma-style embedding scale
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return shard(x, "batch", None, None)
+
+
+def _unemb_w(p: Dict, cfg: ModelConfig) -> jax.Array:
+    return p["emb"].T if cfg.tie_embeddings else p["unemb"]
+
+
+def logits_fn(p: Dict, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    h = rms_norm(h, p["ln_f"], cfg.norm_eps)
+    out = jnp.einsum("bsd,dv->bsv", h, _unemb_w(p, cfg))
+    return shard(out, "batch", None, "vocab")
+
+
+def lm_loss(p: Dict, cfg: ModelConfig, h: jax.Array, labels: jax.Array
+            ) -> jax.Array:
+    """Chunked cross-entropy: never materializes [B, S, V] for the full
+    sequence. Vocab-parallel-safe (one-hot contraction, not gather)."""
+    B, S, d = h.shape
+    h = rms_norm(h, p["ln_f"], cfg.norm_eps)
+    w = _unemb_w(p, cfg)
+    V = w.shape[1]
+    c = CE_CHUNK
+    while S % c:
+        c //= 2
+    n = S // c
+
+    @jax.checkpoint  # recompute chunk logits in backward: never stacked
+    def body(carry, inp):
+        tot, cnt = carry
+        hc, lc = inp                                   # [B,c,d], [B,c]
+        logits = jnp.einsum("bcd,dv->bcv", hc, w).astype(jnp.float32)
+        logits = shard(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(jnp.maximum(lc, 0), V, dtype=jnp.float32)
+        gold = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        mask = (lc >= 0).astype(jnp.float32)
+        return (tot + jnp.sum((lse - gold) * mask), cnt + jnp.sum(mask)), None
+
+    hc = h.reshape(B, n, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, c).transpose(1, 0, 2)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+def _positions(S: int) -> jax.Array:
+    return jnp.arange(S, dtype=jnp.int32)[None]
+
+
+def trunk_hidden(cfg: ModelConfig, rt: Runtime, p: Dict, batch: Dict,
+                 inputs: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (hidden, aux_loss, inputs). ``inputs`` defaults to the
+    teacher-forcing slice tokens[:, :-1]."""
+    tokens = batch["tokens"]
+    if inputs is None:
+        inputs = tokens[:, :-1]
+    x = embed(p, cfg, inputs)
+    S = x.shape[1]
+    pos = _positions(S)
+    aux = jnp.float32(0.0)
+    if cfg.family in ("dense", "moe"):
+        x, aux = tfm.trunk_forward(p["layers"], cfg, rt, x, pos, "decoder")
+    elif cfg.family == "ssm":
+        x, aux = tfm.trunk_forward(p["layers"], cfg, rt, x, pos, "ssm")
+    elif cfg.family == "hybrid":
+        x = tfm.hybrid_forward(p["layers"], cfg, rt, x, pos)
+    elif cfg.family == "vlm":
+        x = tfm.vlm_forward(p["layers"], cfg, rt, x, pos, batch["frontend"])
+    elif cfg.family == "encdec":
+        memory = tfm.encoder_forward(p["encoder"], cfg, rt, batch["frontend"])
+        x, aux = _encdec_decoder(p, cfg, rt, x, pos, memory)
+    return x, aux, inputs
+
+
+def _encdec_decoder(p, cfg, rt, x, pos, memory):
+    def body(carry, p_layer):
+        h, aux = carry
+        h = shard(h, "batch", "seq", None)
+        h, a = tfm.decoder_layer(p_layer, cfg, rt, h, pos, memory=memory)
+        return (shard(h, "batch", "seq", None), aux + a), None
+    body = tfm._maybe_remat(body, rt)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), p["layers"])
+    return x, aux
+
+
+def loss_fn(cfg: ModelConfig, rt: Runtime, p: Dict, batch: Dict
+            ) -> Tuple[jax.Array, Dict]:
+    tokens = batch["tokens"]
+    labels = tokens[:, 1:]
+    h, aux, inputs = trunk_hidden(cfg, rt, p, batch)
+    loss = lm_loss(p, cfg, h, labels)
+    metrics = {"ce": loss, "aux": aux}
+    total = loss + cfg.router_aux_coef * aux
+    if cfg.mtp_depth and "mtp" in p:
+        mtp = p["mtp"]
+        # predict t+2: combine h_t with emb(x_{t+1}); keep the padded length S
+        # (sharding-friendly) and mask the trailing position in the loss
+        h_in = rms_norm(h, mtp["ln_h"], cfg.norm_eps)
+        e_next = jnp.pad(inputs[:, 1:], ((0, 0), (0, 1)))
+        e_in = rms_norm(embed(p, cfg, e_next), mtp["ln_e"], cfg.norm_eps)
+        z = jnp.einsum("bsk,kd->bsd",
+                       jnp.concatenate([h_in, e_in], axis=-1), mtp["w_proj"])
+        z, _ = tfm.decoder_layer(mtp["block"], cfg, rt, z,
+                                 _positions(z.shape[1]))
+        mtp_labels = jnp.pad(labels[:, 1:], ((0, 0), (0, 1)),
+                             constant_values=-1)
+        mtp_loss = lm_loss(p, cfg, z, mtp_labels)
+        metrics["mtp"] = mtp_loss
+        total = total + rt.mtp_coef * mtp_loss
+    metrics["loss"] = total
+    return total, metrics
+
+
+def forward_logits(cfg: ModelConfig, rt: Runtime, p: Dict, batch: Dict
+                   ) -> jax.Array:
+    """Full-sequence logits (small configs / tests only)."""
+    h, _, _ = trunk_hidden(cfg, rt, p, batch)
+    return logits_fn(p, cfg, h)

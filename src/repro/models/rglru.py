@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+Recurrence:  a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t))
+             h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with i_t = sigmoid(W_i x_t) the input gate. Training uses an associative
+scan (log-depth); decode is a single-step recurrence on a [B, lru_width]
+state. The full residual block is: proj-in (2 branches) -> causal conv(4)
+-> RG-LRU -> gelu-gated merge -> proj-out.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamMaker
+
+RG_C = 8.0
+CONV_K = 4
+
+
+def rglru_params(mk: ParamMaker, prefix: str, cfg: ModelConfig,
+                 tp: int = 1) -> Dict:
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    return {
+        "w_x": mk(f"{prefix}.w_x", (d, w), ("dmodel", "lru")),
+        "w_gate": mk(f"{prefix}.w_gate", (d, w), ("dmodel", "lru")),
+        "conv_w": mk(f"{prefix}.conv_w", (CONV_K, w), (None, "lru"), scale=0.5),
+        "conv_b": mk(f"{prefix}.conv_b", (w,), ("lru",), init="zeros"),
+        "w_a": mk(f"{prefix}.w_a", (w, w), ("lru", None), scale=0.02),
+        "b_a": mk(f"{prefix}.b_a", (w,), (None,), init="zeros"),
+        "w_i": mk(f"{prefix}.w_i", (w, w), ("lru", None), scale=0.02),
+        "b_i": mk(f"{prefix}.b_i", (w,), (None,), init="zeros"),
+        "lam": mk(f"{prefix}.lam", (w,), (None,), init="ones"),
+        "w_out": mk(f"{prefix}.w_out", (w, d), ("lru", "dmodel")),
+    }
+
+
+def _gates(p: Dict, x: jax.Array):
+    """log a_t and gated input. x: [..., w] (f32)."""
+    ra = jax.nn.sigmoid(x @ p["w_a"].astype(jnp.float32)
+                        + p["b_a"].astype(jnp.float32))
+    log_a = -RG_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * ra
+    i = jax.nn.sigmoid(x @ p["w_i"].astype(jnp.float32)
+                       + p["b_i"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x)
+    return a, gated
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+
+
+def rglru_forward(p: Dict, cfg: ModelConfig, u: jax.Array,
+                  return_state: bool = False):
+    """Full-sequence RG-LRU block via associative scan. u: [B, S, d]."""
+    x_raw = jnp.einsum("bsd,dw->bsw", u, p["w_x"])
+    gate = jnp.einsum("bsd,dw->bsw", u, p["w_gate"])
+    x = _causal_conv(x_raw, p["conv_w"], p["conv_b"])
+    xf = x.astype(jnp.float32)
+    a, gated = _gates(p, xf)
+
+    # h_t = a_t h_{t-1} + gated_t  — associative scan on (a, b) pairs
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    y = h.astype(u.dtype) * jax.nn.gelu(gate)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+    if return_state:
+        S = u.shape[1]
+        tail = x_raw[:, -(CONV_K - 1):] if S >= CONV_K - 1 else jnp.pad(
+            x_raw, ((0, 0), (CONV_K - 1 - S, 0), (0, 0)))
+        return out, (h[:, -1], tail)
+    return out
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, w), dtype),
+    }
+
+
+def rglru_decode_step(p: Dict, cfg: ModelConfig, u: jax.Array, cache: Dict
+                      ) -> Tuple[jax.Array, Dict]:
+    """u: [B, 1, d] single-token step."""
+    x = jnp.einsum("bsd,dw->bsw", u, p["w_x"])[:, 0]
+    gate = jnp.einsum("bsd,dw->bsw", u, p["w_gate"])[:, 0]
+    win = jnp.concatenate([cache["conv"], x[:, None]], axis=1)    # [B,K,w]
+    x = (jnp.einsum("bkw,kw->bw", win.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32))
+         + p["conv_b"].astype(jnp.float32))
+    a, gated = _gates(p, x)
+    h = cache["h"] * a + gated
+    y = h.astype(u.dtype) * jax.nn.gelu(gate)
+    out = jnp.einsum("bw,wd->bd", y, p["w_out"])[:, None]
+    return out, {"h": h, "conv": win[:, 1:].astype(cache["conv"].dtype)}

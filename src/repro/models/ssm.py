@@ -1,0 +1,203 @@
+"""Mamba2 — SSD (state-space duality) block, chunked-scan training form and
+O(1)-state decode form (arXiv:2405.21060).
+
+Training uses the SSD block-decomposition: within a chunk the output is a
+masked quadratic form (attention-like, MXU-friendly); across chunks a small
+recurrence over per-chunk states carries history. Decode keeps a per-layer
+state h: [B, n_heads, head_dim, d_state] and a rolling conv window.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamMaker, shard
+
+CHUNK = 128
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return d_in, nheads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def ssm_params(mk: ParamMaker, prefix: str, cfg: ModelConfig,
+               tp: int = 1) -> Dict:
+    d = cfg.d_model
+    d_in, nheads, hd, ds = ssm_dims(cfg)
+    G = cfg.ssm_n_groups
+    conv_dim = d_in + 2 * G * ds
+    return {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "w_in": mk(f"{prefix}.w_in", (d, 2 * d_in + 2 * G * ds + nheads),
+                   ("dmodel", "lru")),
+        "conv_w": mk(f"{prefix}.conv_w", (cfg.ssm_conv_kernel, conv_dim),
+                     (None, "lru"), scale=0.5),
+        "conv_b": mk(f"{prefix}.conv_b", (conv_dim,), ("lru",), init="zeros"),
+        "A_log": mk(f"{prefix}.A_log", (nheads,), ("lru",), init="zeros"),
+        "D": mk(f"{prefix}.D", (nheads,), ("lru",), init="ones"),
+        "dt_bias": mk(f"{prefix}.dt_bias", (nheads,), ("lru",), init="zeros"),
+        "norm_g": mk(f"{prefix}.norm_g", (d_in,), ("lru",), init="ones"),
+        "w_out": mk(f"{prefix}.w_out", (d_in, d), ("lru", "dmodel")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    d_in, nheads, hd, ds = ssm_dims(cfg)
+    G = cfg.ssm_n_groups
+    z, x, B, C, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + G * ds, 2 * d_in + 2 * G * ds],
+        axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. x: [B, S, C], w: [K, C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def ssd_forward(p: Dict, cfg: ModelConfig, u: jax.Array,
+                return_state: bool = False):
+    """Chunked SSD over a full sequence. u: [B, S, d_model].
+    ``return_state`` additionally returns (h_final, conv_tail) for decode."""
+    Bsz, S, _ = u.shape
+    d_in, H, hd, ds = ssm_dims(cfg)
+    G = cfg.ssm_n_groups
+    zxbcdt = jnp.einsum("bsd,dk->bsk", u, p["w_in"])
+    z, xbc_dt = zxbcdt[..., :d_in], zxbcdt[..., d_in:]
+    xbc, dt = xbc_dt[..., :d_in + 2 * G * ds], xbc_dt[..., d_in + 2 * G * ds:]
+    xbc_raw = xbc
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    x = xbc[..., :d_in]
+    Bc = xbc[..., d_in:d_in + G * ds].reshape(Bsz, S, G, ds)
+    Cc = xbc[..., d_in + G * ds:].reshape(Bsz, S, G, ds)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,S,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # [H]
+    xh = x.reshape(Bsz, S, H, hd)
+    # broadcast groups to heads
+    hpg = H // G
+    Bh = jnp.repeat(Bc, hpg, axis=2)                              # [B,S,H,ds]
+    Ch = jnp.repeat(Cc, hpg, axis=2)
+
+    nchunks = S // CHUNK if S % CHUNK == 0 else 1
+    L = S // nchunks
+    dA = (dt * A).reshape(Bsz, nchunks, L, H)                     # log decay
+    xc = xh.reshape(Bsz, nchunks, L, H, hd)
+    Bb = Bh.reshape(Bsz, nchunks, L, H, ds)
+    Cb = Ch.reshape(Bsz, nchunks, L, H, ds)
+    dtc = dt.reshape(Bsz, nchunks, L, H)
+
+    seg = jnp.cumsum(dA, axis=2)                                  # [B,N,L,H]
+
+    # ---- intra-chunk (quadratic, attention-like) ----
+    # M[i,j] = exp(seg_i - seg_j) * (C_i . B_j) * dt_j  for j <= i
+    def intra(args):
+        segc, Cc_, Bc_, dtc_, xc_ = args
+        gram = jnp.einsum("blhd,bmhd->bhlm", Cc_, Bc_,
+                          preferred_element_type=jnp.float32)
+        decay = segc[:, :, None, :] - segc[:, None, :, :]          # [B,L,M,H]
+        decay = decay.transpose(0, 3, 1, 2)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        m = jnp.where(mask, jnp.exp(decay), 0.0) * gram
+        m = m * dtc_.transpose(0, 2, 1)[:, :, None, :]
+        y = jnp.einsum("bhlm,bmhd->blhd", m.astype(xc_.dtype), xc_)
+        return y
+
+    # ---- per-chunk final states ----
+    # state_N = sum_j exp(seg_L - seg_j) * dt_j * B_j x_j^T
+    def chunk_state(args):
+        segc, Bc_, dtc_, xc_ = args
+        w = jnp.exp(segc[:, -1:, :] - segc) * dtc_                 # [B,L,H]
+        return jnp.einsum("blh,blhd,blhp->bhpd", w.astype(xc_.dtype),
+                          Bc_, xc_)                                # [B,H,hd,ds]
+
+    intra_y = jax.vmap(intra, in_axes=1, out_axes=1)(
+        (seg, Cb, Bb, dtc, xc))
+    states = jax.vmap(chunk_state, in_axes=1, out_axes=1)(
+        (seg, Bb, dtc, xc))                                        # [B,N,H,hd,ds]
+    chunk_decay = jnp.exp(seg[:, :, -1])                           # [B,N,H]
+
+    # ---- inter-chunk recurrence over N chunks ----
+    def scan_fn(h, inp):
+        st, dec = inp                                              # [B,H,hd,ds]
+        h_new = h * dec[..., None, None].astype(h.dtype) + st
+        return h_new, h                                            # carry-in state
+
+    h0 = jnp.zeros_like(states[:, 0])
+    h_last, h_prev = jax.lax.scan(
+        scan_fn, h0, (states.transpose(1, 0, 2, 3, 4),
+                      chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                       # [B,N,H,hd,ds]
+
+    # ---- contribution of carried state to each position ----
+    inter_w = jnp.exp(seg)                                         # [B,N,L,H]
+    inter_y = jnp.einsum("bnlh,bnlhd,bnhpd->bnlhp",
+                         inter_w.astype(xc.dtype), Cb, h_prev)
+    y = (intra_y + inter_y).reshape(Bsz, S, H, hd)
+    y = y + xh * p["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(Bsz, S, d_in)
+    # gated RMSNorm (mamba2 norm-before-out)
+    from repro.models.common import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), p["norm_g"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+    if return_state:
+        K = cfg.ssm_conv_kernel
+        conv_tail = xbc_raw[:, -(K - 1):] if S >= K - 1 else jnp.pad(
+            xbc_raw, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        return out, (h_last.astype(jnp.float32), conv_tail)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(1) per token
+# ---------------------------------------------------------------------------
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    d_in, H, hd, ds = ssm_dims(cfg)
+    conv_dim = d_in + 2 * cfg.ssm_n_groups * ds
+    return {
+        "h": jnp.zeros((batch, H, hd, ds), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_kernel - 1, conv_dim), dtype),
+    }
+
+
+def ssd_decode_step(p: Dict, cfg: ModelConfig, u: jax.Array, cache: Dict
+                    ) -> Tuple[jax.Array, Dict]:
+    """u: [B, 1, d_model] -> y: [B, 1, d_model]; updates (h, conv) cache."""
+    Bsz = u.shape[0]
+    d_in, H, hd, ds = ssm_dims(cfg)
+    G = cfg.ssm_n_groups
+    zxbcdt = jnp.einsum("bsd,dk->bsk", u, p["w_in"])[:, 0]
+    z, rest = zxbcdt[..., :d_in], zxbcdt[..., d_in:]
+    xbc, dt = rest[..., :d_in + 2 * G * ds], rest[..., d_in + 2 * G * ds:]
+    # rolling conv window
+    win = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # [B,K,C]
+    conv_out = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)
+                      ).astype(u.dtype)
+    x = xbc[..., :d_in].reshape(Bsz, H, hd)
+    Bc = xbc[..., d_in:d_in + G * ds].reshape(Bsz, G, ds)
+    Cc = xbc[..., d_in + G * ds:].reshape(Bsz, G, ds)
+    hpg = H // G
+    Bh = jnp.repeat(Bc, hpg, axis=1)
+    Ch = jnp.repeat(Cc, hpg, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                          # [B,H]
+    h = cache["h"] * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bhd->bhpd", dt, x.astype(jnp.float32),
+        Bh.astype(jnp.float32))
+    y = jnp.einsum("bhpd,bhd->bhp", h, Ch.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * p["D"][None, :, None].astype(jnp.float32)
+    y = y.reshape(Bsz, d_in).astype(u.dtype)
+    from repro.models.common import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), p["norm_g"], cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, p["w_out"])[:, None]
+    return out, {"h": h, "conv": win[:, 1:]}

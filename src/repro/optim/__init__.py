@@ -1,0 +1,2 @@
+from repro.optim.adamw import (  # noqa: F401
+    OptConfig, init_opt_state, opt_state_specs, apply_updates, lr_schedule)

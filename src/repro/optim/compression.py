@@ -1,0 +1,58 @@
+"""Gradient compression for the data-parallel reduction.
+
+Int8 per-tensor absmax quantization with error feedback: the quantization
+residual is carried to the next step, so the *accumulated* update is
+unbiased (the standard EF-SGD/EF21 argument) — convergence is preserved
+while the cross-pod wire traffic halves (int8 vs bf16).
+
+Numerics are applied inside the train step (`OptConfig.grad_compression`);
+on the multi-pod deployment the quantized tensors are what crosses the
+pod boundary (the data-parallel reduction over the ``pod`` axis), cutting
+the slowest link's bytes 2x. The compression itself is a pure function, so
+the same code serves both the simulation-validated numerics and the wire
+path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor absmax int8. Returns (q int8, scale f32)."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads: Any, error: Any) -> Tuple[Any, Any]:
+    """Error-feedback compression: g_eff = Q(g + e); e' = (g + e) - g_eff.
+    Returns (compressed-and-dequantized grads, new error state)."""
+    def one(g, e):
+        acc = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(acc)
+        deq = dequantize(q, scale)
+        return deq.astype(g.dtype), acc - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
+            jax.tree.unflatten(tdef, [o[1] for o in outs]))
+
+
+def wire_bytes_saved(params: Any, dp_degree: int = 2) -> int:
+    """Cross-pod DP reduction bytes saved by int8 vs bf16 (per step)."""
+    n = sum(p.size for p in jax.tree.leaves(params))
+    return n * (2 - 1) * max(dp_degree - 1, 1)

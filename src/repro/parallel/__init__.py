@@ -1,0 +1,5 @@
+from repro.parallel.sharding import (  # noqa: F401
+    named_sharding_tree,
+    zero1_specs,
+    spec_bytes_per_device,
+)

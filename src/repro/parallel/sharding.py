@@ -1,0 +1,63 @@
+"""Sharding utilities: PartitionSpec trees -> NamedSharding trees, ZeRO-1
+optimizer-state sharding, and per-device footprint accounting."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def named_sharding_tree(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        return math.prod(mesh.shape[n] for n in name)
+    return mesh.shape[name]
+
+
+def zero1_specs(param_specs: Any, shapes: Any, mesh: Mesh,
+                batch_axes: Tuple[str, ...]) -> Any:
+    """ZeRO-1: additionally shard optimizer moments across the data(+pod)
+    axes, on the first dimension that is currently unsharded and divisible.
+
+    XLA turns the resulting sharding mismatch into the canonical ZeRO
+    schedule: gradients reduce-scatter into the moment sharding, updated
+    params all-gather back — no hand-written collectives needed.
+    """
+    dp = math.prod(mesh.shape[a] for a in batch_axes)
+
+    def upgrade(spec: P, shape) -> P:
+        dims = tuple(spec) + (None,) * (len(shape.shape) - len(spec))
+        for i, (ax, n) in enumerate(zip(dims, shape.shape)):
+            if ax is None and n % dp == 0 and n >= dp:
+                new = list(dims)
+                new[i] = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+                return P(*new)
+        return P(*dims)
+
+    return jax.tree.map(upgrade, param_specs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def spec_bytes_per_device(shapes: Any, specs: Any, mesh: Mesh) -> int:
+    """Static per-device bytes for a (ShapeDtypeStruct tree, spec tree)."""
+    total = 0
+    for shape, spec in zip(jax.tree.leaves(shapes),
+                           jax.tree.leaves(
+                               specs, is_leaf=lambda x: isinstance(x, P))):
+        n = shape.size * shape.dtype.itemsize
+        denom = 1
+        for ax in tuple(spec):
+            denom *= _axis_size(mesh, ax)
+        total += n // max(denom, 1)
+    return total

@@ -1,0 +1,32 @@
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.models.transformer import Runtime  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rt():
+    return Runtime(tp=1, moe_impl="local")
+
+
+def reduced_f32(arch: str):
+    return dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 420) -> str:
+    """Run a snippet in a fresh process with N host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
+    return out.stdout

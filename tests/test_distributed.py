@@ -1,0 +1,187 @@
+"""Multi-device integration tests (subprocess with 8 forced host devices):
+DP x TP train-step equivalence vs single device, expert-parallel MoE vs the
+local oracle, and elastic restore into a smaller mesh."""
+import pytest
+
+from conftest import run_subprocess
+
+COMMON = r"""
+import dataclasses, jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.configs import get_config, SHAPES_BY_NAME
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.models.common import ShardingRules, default_rules, sharding_ctx
+from repro.models.transformer import Runtime
+from repro.optim import OptConfig, init_opt_state
+from repro.parallel.sharding import named_sharding_tree
+
+def reduced(arch):
+    return dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+
+def batch_for(cfg, key, B=4, S=32):
+    b = {"tokens": jax.random.randint(key, (B, S+1), 0, cfg.vocab_size)}
+    if cfg.frontend_seq:
+        b["frontend"] = jax.random.normal(key, (B, cfg.frontend_seq, cfg.d_model), jnp.float32)*0.02
+    return b
+"""
+
+
+def test_dp_tp_equivalence():
+    code = COMMON + r"""
+arch = "qwen2.5-14b"
+cfg = reduced(arch)
+key = jax.random.PRNGKey(0)
+# --- single device reference ---
+rt1 = Runtime(tp=1, moe_impl="local")
+params, _ = M.init_params(cfg, rt1, key)
+batch = batch_for(cfg, key)
+loss_ref, _ = M.loss_fn(cfg, rt1, params, batch)
+
+# --- 2(data) x 4(model) mesh ---
+mesh = make_host_mesh(2, 4)
+rules = default_rules()
+rt = Runtime(tp=4, mesh=mesh, moe_impl="local")
+with mesh, sharding_ctx(rules, mesh):
+    params4, specs4 = M.init_params(cfg, rt, key, rules=rules)
+    shardings = named_sharding_tree(specs4, mesh)
+    params4 = jax.tree.map(jax.device_put, params4, shardings)
+    lfn = jax.jit(lambda p, b: M.loss_fn(cfg, rt, p, b)[0])
+    loss_dist = lfn(params4, batch)
+# tp=1 vs tp=4 init differ only by head padding absence (reduced cfg: heads=4 %4==0 -> identical params)
+print("REF", float(loss_ref), "DIST", float(loss_dist))
+assert abs(float(loss_ref) - float(loss_dist)) < 2e-4, (loss_ref, loss_dist)
+print("OK-EQUIV")
+"""
+    out = run_subprocess(code, devices=8)
+    assert "OK-EQUIV" in out
+
+
+def test_moe_ep_matches_local():
+    code = COMMON + r"""
+arch = "dbrx-132b"
+cfg = reduced(arch)
+key = jax.random.PRNGKey(1)
+# capacity drops differ between per-shard (EP) and global (local) dispatch;
+# compare the drop-free math by inflating the capacity factor
+import repro.models.moe as moe_mod
+moe_mod.CAPACITY_FACTOR = 8.0
+rt1 = Runtime(tp=1, moe_impl="local")
+params, _ = M.init_params(cfg, rt1, key)
+batch = batch_for(cfg, key, B=4, S=32)
+loss_ref, _ = M.loss_fn(cfg, rt1, params, batch)
+
+mesh = make_host_mesh(2, 4)
+rules = default_rules()
+rt = Runtime(tp=4, mesh=mesh, batch_axes=("data",), moe_impl="ep")
+with mesh, sharding_ctx(rules, mesh):
+    params4, specs4 = M.init_params(cfg, rt, key, rules=rules)
+    shardings = named_sharding_tree(specs4, mesh)
+    params4 = jax.tree.map(jax.device_put, params4, shardings)
+    lfn = jax.jit(lambda p, b: M.loss_fn(cfg, rt, p, b)[0])
+    loss_ep = lfn(params4, batch)
+print("REF", float(loss_ref), "EP", float(loss_ep))
+assert abs(float(loss_ref) - float(loss_ep)) < 5e-4, (loss_ref, loss_ep)
+print("OK-MOE-EP")
+"""
+    out = run_subprocess(code, devices=8)
+    assert "OK-MOE-EP" in out
+
+
+def test_distributed_train_step_runs_and_grads_flow():
+    code = COMMON + r"""
+cfg = reduced("deepseek-v3-671b")   # MLA + shared experts + MTP
+key = jax.random.PRNGKey(2)
+mesh = make_host_mesh(2, 4)
+rules = default_rules()
+rt = Runtime(tp=4, mesh=mesh, moe_impl="ep")
+with mesh, sharding_ctx(rules, mesh):
+    params, specs = M.init_params(cfg, rt, key, rules=rules)
+    shardings = named_sharding_tree(specs, mesh)
+    params = jax.tree.map(jax.device_put, params, shardings)
+    state = {"params": params, "opt": init_opt_state(params)}
+    step = jax.jit(steps_mod.make_train_step(cfg, rt, OptConfig(lr=1e-3), rules))
+    batch = batch_for(cfg, key)
+    s1, m1 = step(state, batch)
+    s2, m2 = step(s1, batch)
+    assert np.isfinite(float(m1["loss"])) and np.isfinite(float(m2["loss"]))
+    assert float(m2["loss"]) != float(m1["loss"])
+print("OK-TRAIN-DIST")
+"""
+    out = run_subprocess(code, devices=8)
+    assert "OK-TRAIN-DIST" in out
+
+
+def test_elastic_restore_smaller_mesh():
+    code = COMMON + r"""
+import tempfile, pathlib
+from repro.checkpoint import save
+from repro.launch.elastic import elastic_restore, shrink_mesh
+from repro.optim import init_opt_state
+
+cfg = reduced("stablelm-12b")
+key = jax.random.PRNGKey(3)
+mesh8 = make_host_mesh(2, 4)
+rules = default_rules()
+rt8 = Runtime(tp=4, mesh=mesh8, moe_impl="local")
+with mesh8, sharding_ctx(rules, mesh8):
+    params, specs = M.init_params(cfg, rt8, key, rules=rules)
+    state = {"params": params, "opt": init_opt_state(params)}
+tmp = tempfile.mkdtemp()
+save(tmp, 5, state)
+
+# "lose" half the fleet: restore into a 1x4 mesh
+devs = jax.devices()[:4]
+import numpy as np
+small = Mesh(np.array(devs).reshape(1, 4), ("data", "model"))
+state2, step, rt_new = elastic_restore(tmp, cfg, rt8, small)
+assert step == 5 and rt_new.tp == 4
+l0 = jax.tree.leaves(state["params"])[0]
+l1 = jax.tree.leaves(state2["params"])[0]
+assert np.allclose(np.asarray(l0), np.asarray(l1))
+with small, sharding_ctx(rules, small):
+    lfn = jax.jit(lambda p, b: M.loss_fn(cfg, dataclasses.replace(rt_new, mesh=small), p, b)[0])
+    loss = lfn(state2["params"], batch_for(cfg, key))
+assert np.isfinite(float(loss))
+print("OK-ELASTIC")
+"""
+    out = run_subprocess(code, devices=8)
+    assert "OK-ELASTIC" in out
+
+
+def test_moe_ep2d_decode_matches_local():
+    """2D expert sharding (experts->model, expert-FFN->data): decode output
+    must match the single-device oracle exactly (no drops at this size)."""
+    code = COMMON + r"""
+import repro.models.moe as moe_mod
+moe_mod.CAPACITY_FACTOR = 8.0
+from repro.models import decode as D
+from repro.models.common import ShardingRules
+
+cfg = reduced("deepseek-v3-671b")
+key = jax.random.PRNGKey(5)
+rt1 = Runtime(tp=1, moe_impl="local")
+params, _ = M.init_params(cfg, rt1, key)
+tokens = jax.random.randint(key, (4, 8), 0, cfg.vocab_size)
+_, st1 = D.prefill(cfg, rt1, params, {"tokens": tokens}, 16)
+ref_logits, _ = D.decode_step(cfg, rt1, params, tokens[:, :1], jnp.int32(8), st1)
+
+mesh = make_host_mesh(2, 4)
+base = default_rules()
+d = dict(base.rules); d["expert_ff"] = "data"
+rules = ShardingRules(rules=d)
+rt = Runtime(tp=4, mesh=mesh, moe_impl="ep", moe_ep2d_decode=True,
+             moe_capacity_factor=8.0)
+with mesh, sharding_ctx(rules, mesh):
+    # same arrays, new shardings
+    specs = M.param_specs(cfg, rt1, rules=rules)  # tp=1 shapes == tp=4 here? heads 4%4==0 yes
+    lg = jax.jit(lambda p, t, pos, st: D.decode_step(cfg, rt, p, t, pos, st))
+    logits2, _ = lg(params, tokens[:, :1], jnp.int32(8), st1)
+err = float(jnp.max(jnp.abs(ref_logits - logits2)))
+print("EP2D err", err)
+assert err < 5e-3, err
+print("OK-EP2D")
+"""
+    out = run_subprocess(code, devices=8)
+    assert "OK-EP2D" in out

@@ -1,0 +1,88 @@
+"""Modal decomposition + governor policy invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import power_model as pm
+from repro.core.governor import GovernorConfig, PowerGovernor
+from repro.core.hardware import MI250X_GCD, MODES
+from repro.core.modal import (classify_power, decompose, detect_peaks,
+                              power_histogram, synth_fleet_powers)
+
+
+def test_synth_fleet_matches_table_iv_hours():
+    powers = synth_fleet_powers(500_000, seed=0)
+    d = decompose(powers)
+    for m in MODES:
+        assert abs(d.hours_pct[m.idx] - m.gpu_hours_pct) < 0.5, m
+
+
+def test_classify_power_bands_mi250x():
+    p = np.array([100.0, 250.0, 500.0, 600.0])
+    np.testing.assert_array_equal(classify_power(p, MI250X_GCD),
+                                  [1, 2, 3, 4])
+
+
+def test_histogram_peaks_found():
+    powers = synth_fleet_powers(200_000, seed=2)
+    centers, hist = power_histogram(powers)
+    peaks = detect_peaks(centers, hist)
+    assert len(peaks) >= 2           # multi-modal fleet (paper Fig. 8)
+    assert any(p < 200 for p in peaks)
+    assert any(200 < p < 560 for p in peaks)
+
+
+def test_energy_decomposition_consistency():
+    powers = synth_fleet_powers(100_000, seed=3)
+    d = decompose(powers)
+    assert abs(sum(d.energy_mwh.values()) - d.total_energy_mwh) < 1e-9
+
+
+# ---------------------------------------------------------------- governor
+profiles = st.builds(pm.StepProfile,
+                     compute_s=st.floats(1e-4, 5.0),
+                     memory_s=st.floats(1e-4, 5.0),
+                     collective_s=st.floats(0.0, 5.0))
+
+
+@settings(max_examples=60, deadline=None)
+@given(p=profiles)
+def test_governor_never_violates_dt0_budget(p):
+    gov = PowerGovernor(GovernorConfig(slowdown_budget=0.0))
+    d = gov.choose(p)
+    assert d.time_s <= pm.step_time(p, 1.0) * (1 + 1e-9)
+    assert d.energy_j <= d.baseline_energy_j + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(p=profiles, budget=st.floats(0.0, 0.5))
+def test_governor_budget_respected(p, budget):
+    gov = PowerGovernor(GovernorConfig(slowdown_budget=budget))
+    d = gov.choose(p)
+    assert d.time_s <= pm.step_time(p, 1.0) * (1 + budget) * (1 + 1e-9)
+
+
+def test_governor_downclocks_memory_bound():
+    """The paper's central mechanism: memory-bound -> clock down for free."""
+    gov = PowerGovernor(GovernorConfig(slowdown_budget=0.0))
+    d = gov.choose(pm.StepProfile(compute_s=0.1, memory_s=1.0))
+    assert d.freq_mhz < 1700
+    assert d.savings_pct > 5.0
+    assert d.mode.idx == 2
+
+
+def test_governor_keeps_compute_bound_at_nominal():
+    gov = PowerGovernor(GovernorConfig(slowdown_budget=0.0))
+    d = gov.choose(pm.StepProfile(compute_s=1.0, memory_s=0.05))
+    assert d.freq_mhz == 1700
+    assert d.savings_pct == pytest.approx(0.0, abs=1e-6)
+
+
+def test_governor_actuator_history():
+    from repro.core.governor import SimulatedActuator
+    act = SimulatedActuator()
+    gov = PowerGovernor(GovernorConfig(), actuator=act)
+    gov.choose(pm.StepProfile(0.1, 1.0))
+    gov.choose(pm.StepProfile(1.0, 0.1))
+    assert len(act.history) == 2
+    assert act.history[0] < act.history[1]

@@ -1,0 +1,74 @@
+"""Projection engine vs the paper's published Table V + properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hardware as hw
+from repro.core.projection import (ProjectionRow, project,
+                                   project_from_decomposition,
+                                   validate_against_paper)
+
+
+def test_table_v_freq_reproduced():
+    errs = validate_against_paper("freq")
+    assert errs["ci"] < 1.0          # MWh
+    assert errs["mi"] < 8.0          # one Table-III rounding artifact (1100)
+    assert errs["sav"] < 0.15        # percentage points
+    assert errs["dt"] < 0.15
+    assert errs["sav0"] < 0.15
+
+
+def test_table_v_power_reproduced():
+    errs = validate_against_paper("power")
+    assert errs["ci"] < 0.2
+    assert errs["mi"] < 0.2
+    assert errs["sav"] < 0.05
+    assert errs["dt"] < 0.1
+    # sav0 @200W excluded: the published row is garbled in extraction and
+    # MB runtime at 200W (125.7%) violates the dT=0 rule the other cells obey
+
+
+def test_headline_numbers():
+    """Paper abstract: up to 8.5% savings at no slowdown == 1438 MWh cell."""
+    rows = {r.cap: r for r in project([900], "freq")}
+    assert abs(rows[900].mi_mwh - 1438.3) < 1.0
+    assert abs(rows[900].savings_dt0_pct - 8.5) < 0.15
+    assert abs(rows[900].savings_pct - 8.8) < 0.15
+
+
+@settings(max_examples=30, deadline=None)
+@given(e_ci=st.floats(0, 5000), e_mi=st.floats(0, 10000))
+def test_projection_linear_in_mode_energy(e_ci, e_mi):
+    """savings_m = E_m * (1 - pct) is linear in E_m."""
+    r1 = project([900], "freq", e_ci_mwh=e_ci, e_mi_mwh=e_mi)[0]
+    r2 = project([900], "freq", e_ci_mwh=2 * e_ci, e_mi_mwh=2 * e_mi)[0]
+    assert abs(r2.total_mwh - 2 * r1.total_mwh) < 1e-6 * max(1, abs(r1.total_mwh))
+
+
+@settings(max_examples=20, deadline=None)
+@given(cap=st.sampled_from([1500, 1300, 1100, 900, 700]))
+def test_savings_never_exceed_mode_energy(cap):
+    r = project([cap], "freq")[0]
+    assert r.mi_mwh <= hw.FLEET_ENERGY_MI_MWH
+    assert r.ci_mwh <= hw.FLEET_ENERGY_CI_MWH
+
+
+def test_projection_from_synthetic_fleet():
+    from repro.core.modal import decompose, synth_fleet_powers
+    powers = synth_fleet_powers(200_000, seed=1)
+    d = decompose(powers)
+    rows = project_from_decomposition(d, [900], "freq")
+    # savings positive and within the plausible fleet range
+    assert 0 < rows[0].savings_pct < 20
+
+
+def test_domain_targeting_table_vi_shape():
+    from repro.core.projection import domain_targeted_project
+    doms = {"chm": (500.0, 2000.0), "phy": (800.0, 1500.0)}
+    out = domain_targeted_project(doms, [1300, 900])
+    assert set(out) == {"chm", "phy"}
+    # domain-targeted savings are a subset of the system-wide ceiling
+    total = sum(r.total_mwh for rows in out.values() for r in rows
+                if r.cap == 900)
+    system = project([900], "freq")[0].total_mwh
+    assert total < system * 1.5
