@@ -1,0 +1,24 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast test-power bench examples
+
+# Full suite — the tier-1 verification lane.
+test:
+	$(PYTHON) -m pytest -x -q
+
+# Fast lane: skips the @slow model/serving/system tests; seconds, not minutes.
+test-fast:
+	$(PYTHON) -m pytest -x -q -m "not slow"
+
+# Just the power-management surface (the repro.power API + its engines).
+test-power:
+	$(PYTHON) -m pytest -x -q tests/test_power_api.py tests/test_power_model.py \
+		tests/test_modal_governor.py tests/test_projection.py
+
+bench:
+	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py --quiet
+
+examples:
+	$(PYTHON) examples/fleet_projection.py
+	$(PYTHON) examples/energy_aware_training.py

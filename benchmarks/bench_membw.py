@@ -7,8 +7,9 @@ from typing import List, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import power_model as pm
-from repro.core.hardware import TPU_V5E
+from repro.power import ChipModel, StepProfile, TPU_V5E
+
+CHIP = ChipModel(TPU_V5E)
 from repro.kernels import ops
 
 
@@ -31,11 +32,11 @@ def run(verbose: bool = False) -> List[Tuple[str, float, str]]:
         # VMEM-resident: effective bandwidth scales with clock (compute-fed);
         # HBM-resident: bandwidth pinned by HBM.
         reads_s = chunk_bytes / TPU_V5E.hbm_bw
-        prof = (pm.StepProfile(compute_s=reads_s, memory_s=reads_s * 0.05)
+        prof = (StepProfile(compute_s=reads_s, memory_s=reads_s * 0.05)
                 if vmem_resident
-                else pm.StepProfile(compute_s=reads_s * 0.1,
-                                    memory_s=reads_s))
-        ratio = pm.step_time(prof, 700 / 1700) / pm.step_time(prof, 1.0)
+                else StepProfile(compute_s=reads_s * 0.1,
+                                 memory_s=reads_s))
+        ratio = CHIP.step_time(prof, 700 / 1700) / CHIP.step_time(prof, 1.0)
         regime = "vmem" if vmem_resident else "hbm"
         if verbose:
             print(f"{chunk_bytes},{regime},{ratio:.2f}")

@@ -6,14 +6,13 @@ from typing import List, Tuple
 import numpy as np
 
 from repro.core.hardware import MODES
-from repro.core.modal import (decompose, detect_peaks, power_histogram,
-                              synth_fleet_powers)
+from repro.power import FleetAnalysis
 
 
 def run(verbose: bool = False) -> List[Tuple[str, float, str]]:
     t0 = time.perf_counter()
-    powers = synth_fleet_powers(400_000, seed=0)
-    d = decompose(powers)
+    fleet = FleetAnalysis.synthetic(400_000, seed=0).decompose()
+    d = fleet.decomposition
     us = (time.perf_counter() - t0) * 1e6
     rows: List[Tuple[str, float, str]] = []
     if verbose:
@@ -25,8 +24,7 @@ def run(verbose: bool = False) -> List[Tuple[str, float, str]]:
                   f"{d.hours_pct[m.idx]:.1f},{d.energy_mwh[m.idx]:.4f}")
         rows.append((f"modal_mode{m.idx}_hours_pct", 0.0,
                      f"paper={m.gpu_hours_pct};ours={d.hours_pct[m.idx]:.2f}"))
-    centers, hist = power_histogram(powers)
-    peaks = detect_peaks(centers, hist)
+    peaks = fleet.peaks()
     rows.append(("modal_decompose", us, f"n_peaks={len(peaks)}"))
     return rows
 

@@ -4,8 +4,8 @@ import time
 from typing import List, Tuple
 
 from repro.core import hardware as hw
-from repro.core.projection import (domain_targeted_project, project,
-                                   validate_against_paper)
+from repro.power import (domain_targeted_project, project,
+                         validate_against_paper)
 
 
 def run(verbose: bool = False) -> List[Tuple[str, float, str]]:

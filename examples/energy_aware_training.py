@@ -1,6 +1,8 @@
 """The paper's technique as a training feature: run the same training twice
-— uncapped vs governor-managed — and report the projected energy savings per
-slowdown budget (the paper's dT trade-off, Table V semantics).
+— nominal vs energy-aware policy — and report the projected energy savings
+per slowdown budget (the paper's dT trade-off, Table V semantics), plus the
+wider policy space (static DVFS schedules, RAPL-style power caps) behind
+the same ``repro.power`` API.
 
     PYTHONPATH=src python examples/energy_aware_training.py
 """
@@ -12,11 +14,10 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.configs import SHAPES_BY_NAME, get_config
-from repro.core import power_model as pm
-from repro.core.governor import GovernorConfig, PowerGovernor
-from repro.core.hardware import TPU_V5E
 from repro.launch.train import TrainConfig, Trainer
 from repro.models.transformer import Runtime
+from repro.power import (ChipModel, EnergyAwarePolicy, PowerCapPolicy,
+                         StaticFrequencyPolicy, StepProfile, TPU_V5E)
 
 
 def main() -> None:
@@ -26,30 +27,41 @@ def main() -> None:
     rt = Runtime(tp=1, moe_impl="local")
 
     base = Trainer(cfg, shape, rt, tcfg=TrainConfig(
-        steps=30, governor=False, log_every=1000)).run()
+        steps=30, policy="nominal", log_every=1000)).run()
     gov = Trainer(cfg, shape, rt, tcfg=TrainConfig(
-        steps=30, governor=True, log_every=1000)).run()
+        steps=30, policy="energy-aware", log_every=1000)).run()
     print(f"baseline energy : {base['energy_j']:.1f} J")
     print(f"governed energy : {gov['energy_j']:.1f} J "
           f"({100*(1-gov['energy_j']/base['energy_j']):.1f}% saved, dT=0)")
     assert np.allclose(base["losses"], gov["losses"]), \
-        "governor must never change numerics"
+        "power policies must never change numerics"
+
+    chip = ChipModel(TPU_V5E)
 
     # dT trade-off sweep on representative step profiles (paper Fig. 5)
     print("\nslowdown-budget sweep (memory-bound step, e.g. MoE decode):")
-    profile = pm.StepProfile(compute_s=0.2, memory_s=1.0)
+    profile = StepProfile(compute_s=0.2, memory_s=1.0)
     for budget in [0.0, 0.05, 0.112, 0.2, 0.3]:
-        d = PowerGovernor(GovernorConfig(slowdown_budget=budget)).choose(
-            profile)
+        d = EnergyAwarePolicy(slowdown_budget=budget).decide(profile, chip)
         print(f"  dT<={budget*100:5.1f}%  f={d.freq_mhz:4d} MHz  "
               f"power={d.power_w:5.1f} W  savings={d.savings_pct:5.1f}%")
     print("\ncompute-bound step (prefill/train inner loops):")
-    profile = pm.StepProfile(compute_s=1.0, memory_s=0.2)
+    profile = StepProfile(compute_s=1.0, memory_s=0.2)
     for budget in [0.0, 0.112, 0.3]:
-        d = PowerGovernor(GovernorConfig(slowdown_budget=budget)).choose(
-            profile)
+        d = EnergyAwarePolicy(slowdown_budget=budget).decide(profile, chip)
         print(f"  dT<={budget*100:5.1f}%  f={d.freq_mhz:4d} MHz  "
               f"savings={d.savings_pct:5.1f}%")
+
+    # the same memory-bound step under the other policy families
+    print("\npolicy comparison on the memory-bound step:")
+    profile = StepProfile(compute_s=0.2, memory_s=1.0)
+    for pol in [StaticFrequencyPolicy(freq_mhz=900),
+                PowerCapPolicy(cap_w=150.0),
+                EnergyAwarePolicy()]:
+        d = pol.decide(profile, chip)
+        print(f"  {pol.name:13s} f={d.freq_mhz:4d} MHz  "
+              f"power={d.power_w:5.1f} W  savings={d.savings_pct:5.1f}%  "
+              f"slowdown={100*(d.time_s/chip.step_time(profile, 1.0)-1):.1f}%")
 
 
 if __name__ == "__main__":

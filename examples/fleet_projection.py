@@ -1,6 +1,7 @@
-"""The paper's full pipeline at fleet scale: synthetic 3-month telemetry ->
-modal decomposition (Table IV) -> savings projection (Table V) -> domain
-targeting (Table VI), with the published numbers side by side.
+"""The paper's full pipeline at fleet scale through the chained
+``FleetAnalysis`` API: synthetic 3-month telemetry -> modal decomposition
+(Table IV) -> savings projection (Table V) -> domain targeting (Table VI),
+with the published numbers side by side.
 
     PYTHONPATH=src python examples/fleet_projection.py
 """
@@ -8,23 +9,18 @@ import sys
 
 sys.path.insert(0, "src")
 
-import numpy as np
-
 from repro.core import hardware as hw
-from repro.core.modal import (decompose, detect_peaks, power_histogram,
-                              synth_fleet_powers)
-from repro.core.projection import (domain_targeted_project, project,
-                                   validate_against_paper)
+from repro.power import (FleetAnalysis, domain_targeted_project, project,
+                         validate_against_paper)
 
 
 def main() -> None:
     print("=== 1. fleet telemetry (synthetic, calibrated to Table IV) ===")
-    powers = synth_fleet_powers(500_000, seed=0)
-    centers, hist = power_histogram(powers)
-    peaks = detect_peaks(centers, hist)
+    fleet = FleetAnalysis.synthetic(500_000, seed=0).decompose()
+    peaks = fleet.peaks()
     print(f"histogram peaks at ~{[int(p) for p in peaks]} W (paper Fig. 8)")
 
-    d = decompose(powers)
+    d = fleet.decomposition
     print("\nmode                        hours%  (paper)   energy share%")
     for m in hw.MODES:
         print(f"{m.idx} {m.name:26s} {d.hours_pct[m.idx]:6.1f} "
@@ -40,6 +36,11 @@ def main() -> None:
     errs = validate_against_paper("freq")
     print(f"max deviation from published Table V(a): "
           f"{errs['sav']:.2f} pct-points")
+
+    # the same engine driven by the measured fleet instead of paper energies
+    own = fleet.project([900], "freq")[0]
+    print(f"synthetic fleet's own projection @900 MHz: "
+          f"{own.savings_pct:.1f}% of its energy")
 
     print("\n=== 3. domain targeting (Table VI semantics) ===")
     doms = {f"dom{i}": (hw.FLEET_ENERGY_CI_MWH * f / 6,

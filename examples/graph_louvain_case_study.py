@@ -18,7 +18,9 @@ sys.path.insert(0, "src")
 import networkx as nx
 import numpy as np
 
-from repro.core import power_model as pm
+from repro.power import ChipModel, StepProfile, TPU_V5E
+
+CHIP = ChipModel(TPU_V5E)
 
 
 def louvain_workload(G: nx.Graph):
@@ -36,8 +38,8 @@ def louvain_workload(G: nx.Graph):
     edges = G.number_of_edges()
     mem_s = edges * 16 / 819e9 * 1e3        # CSR row sweeps
     comp_s = mem_s * (0.15 + tail)
-    return communities, wall, pm.StepProfile(compute_s=comp_s,
-                                             memory_s=mem_s), degs
+    return communities, wall, StepProfile(compute_s=comp_s,
+                                          memory_s=mem_s), degs
 
 
 def main() -> None:
@@ -50,11 +52,11 @@ def main() -> None:
           f"{'mode':>5s} {'slowdn@900MHz':>13s} {'savings@900':>11s}")
     for name, G in graphs.items():
         comms, wall, prof, degs = louvain_workload(G)
-        mode = pm.classify_mode(prof)
-        t_full = pm.step_time(prof, 1.0)
-        t_900 = pm.step_time(prof, 900 / 1700)
-        e_full = pm.energy_j(prof, 1.0)
-        e_900 = pm.energy_j(prof, 900 / 1700)
+        mode = CHIP.classify_mode(prof)
+        t_full = CHIP.step_time(prof, 1.0)
+        t_900 = CHIP.step_time(prof, 900 / 1700)
+        e_full = CHIP.energy_j(prof, 1.0)
+        e_900 = CHIP.energy_j(prof, 900 / 1700)
         print(f"{name:20s} {G.number_of_edges():7d} {degs.max():5d} "
               f"{degs.mean():5.1f} {mode.idx:5d} "
               f"{100*(t_900/t_full-1):12.1f}% {100*(1-e_900/e_full):10.1f}%")

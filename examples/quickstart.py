@@ -1,5 +1,5 @@
 """Quickstart: train a reduced-config model for a few hundred steps with the
-energy-aware runtime (governor + telemetry + checkpointing) on CPU.
+energy-aware runtime (repro.power policy + telemetry + checkpointing) on CPU.
 
     PYTHONPATH=src python examples/quickstart.py [--steps 200]
 """
@@ -35,11 +35,11 @@ def main() -> None:
     rt = Runtime(tp=1, moe_impl="local")
     trainer = Trainer(cfg, shape, rt, tcfg=TrainConfig(
         steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_interval=50,
-        governor=True, log_every=20))
+        policy="energy-aware", log_every=20))
     out = trainer.run()
     print(f"\nloss: {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
     print(f"projected energy: {out['energy_j']:.1f} J "
-          f"(governor mode-hours: {trainer.telemetry.mode_hours_pct()})")
+          f"(policy mode-hours: {trainer.session.mode_hours_pct()})")
     print(f"checkpoints: {trainer.checkpointer.latest()} "
           f"(restart resumes bitwise — see tests/test_checkpoint_restart.py)")
 

@@ -1,6 +1,6 @@
 """Serving demo: batched decode with per-step energy telemetry. Decode is
-HBM-bound (the paper's memory-intensive mode 2) — the governor clocks down
-with zero latency cost, the paper's highest-yield scenario.
+HBM-bound (the paper's memory-intensive mode 2) — the energy-aware policy
+clocks down with zero latency cost, the paper's highest-yield scenario.
 
     PYTHONPATH=src python examples/serve_demo.py
 """
@@ -12,11 +12,9 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import power_model as pm
-from repro.core.governor import GovernorConfig, PowerGovernor
-from repro.core.telemetry import TelemetryStore
 from repro.models import model as M
 from repro.models.transformer import Runtime
+from repro.power import ChipModel, EnergySession, StepProfile, TPU_V5E
 from repro.serving import Request, ServeEngine
 
 import jax
@@ -30,24 +28,22 @@ def main() -> None:
 
     # decode-step roofline profile for the FULL config at decode_32k (from
     # the dry-run): heavily memory-bound
-    decode_profile = pm.StepProfile(compute_s=0.00005, memory_s=0.004)
+    decode_profile = StepProfile(compute_s=0.00005, memory_s=0.004)
 
-    telemetry = TelemetryStore()
+    session = EnergySession(policy="energy-aware")
     engine = ServeEngine(cfg, rt, params, max_len=96,
-                         governor=PowerGovernor(GovernorConfig()),
-                         telemetry=telemetry, profile=decode_profile)
+                         session=session, profile=decode_profile)
     rng = np.random.default_rng(0)
     reqs = [Request(rng.integers(0, cfg.vocab_size, 24, dtype=np.int32),
                     max_new_tokens=24) for _ in range(8)]
     outs = engine.generate(reqs)
     print(f"generated {len(outs)} sequences x {len(outs[0])} tokens")
     print(f"first: {outs[0][:12].tolist()} ...")
-    print(f"\ntelemetry: {telemetry.mode_hours_pct()} (mode 2 = M.I.)")
-    gov = engine.governor
-    d = gov.choose(decode_profile)
-    print(f"governor at decode: {d.freq_mhz} MHz, power {d.power_w:.0f} W, "
+    print(f"\ntelemetry: {session.mode_hours_pct()} (mode 2 = M.I.)")
+    d = session.decisions[-1]
+    print(f"policy at decode: {d.freq_mhz} MHz, power {d.power_w:.0f} W, "
           f"energy savings {d.savings_pct:.1f}% at zero latency cost")
-    base = pm.power_w(decode_profile, 1.0)
+    base = ChipModel(TPU_V5E).power_w(decode_profile, 1.0)
     print(f"(vs {base:.0f} W uncapped — the paper's mode-2 mechanism)")
 
 

@@ -1,10 +1,17 @@
-"""The paper's primary contribution: power-management analysis & actuation.
+"""Power-management internals. The public surface is :mod:`repro.power` —
+``ChipModel`` / ``PowerPolicy`` / ``EnergySession`` / ``FleetAnalysis`` —
+and new code should import from there; this package holds the engines those
+objects bind together.
 
 hardware     — chip specs + the paper's measured MI250X response tables
-power_model  — roofline-position -> (time, power, energy) under DVFS/caps
-modal        — fleet power-histogram modal decomposition (Table IV)
-projection   — energy-savings projection engine (Tables V/VI, decoded exact)
-governor     — online per-step DVFS governor (the technique as a feature)
+power_model  — ChipModel transfer surface (time/power/energy under DVFS and
+               caps) + deprecated chip-threaded free-function shims
+modal        — fleet power-histogram modal decomposition (Table IV); driven
+               via repro.power.FleetAnalysis
+projection   — energy-savings projection engine (Tables V/VI, decoded
+               exact); driven via repro.power.FleetAnalysis.project
+governor     — sweep_decision + legacy PowerGovernor (new code uses
+               repro.power.EnergyAwarePolicy inside an EnergySession)
 telemetry    — out-of-band-style power telemetry store + scheduler job log
 vai          — VAI roofline-sweep driver over the Pallas kernel
 roofline     — compiled-artifact roofline terms (three-term model)
@@ -18,5 +25,6 @@ from repro.core import projection  # noqa: F401
 from repro.core import roofline  # noqa: F401
 from repro.core.governor import (  # noqa: F401
     Decision, GovernorConfig, PowerGovernor, SimulatedActuator)
+from repro.core.power_model import ChipModel, StepProfile  # noqa: F401
 from repro.core.telemetry import (  # noqa: F401
     JobLog, JobRecord, StepSample, TelemetryStore)

@@ -10,14 +10,18 @@ compute-bound steps stay at nominal.
 Actuation is behind ``PowerActuator``: ``SimulatedActuator`` applies the
 calibrated transfer functions (this container has no power rails);
 deployments implement ``apply(freq_mhz)`` as their platform RPC.
+
+This module is the legacy entry point: new code selects the same sweep via
+``repro.power.EnergyAwarePolicy`` inside an ``EnergySession``. The sweep
+itself lives in :func:`sweep_decision` so both surfaces share one
+implementation bit-for-bit.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Protocol, Tuple
+from typing import List, Optional, Protocol
 
-from repro.core import power_model as pm
+from repro.core.power_model import ChipModel, StepProfile
 from repro.core.hardware import ChipSpec, Mode, TPU_V5E
 
 
@@ -49,6 +53,10 @@ class GovernorConfig:
     n_freqs: int = 11                   # frequency grid resolution
     power_cap_w: Optional[float] = None
 
+    def __post_init__(self):
+        if self.n_freqs < 1:
+            raise ValueError(f"n_freqs must be >= 1, got {self.n_freqs}")
+
 
 @dataclass
 class Decision:
@@ -66,40 +74,48 @@ class Decision:
                         / max(self.baseline_energy_j, 1e-12))
 
 
+def sweep_decision(profile: StepProfile, chip: ChipModel,
+                   slowdown_budget: float = 0.0, n_freqs: int = 11,
+                   power_cap_w: Optional[float] = None) -> Decision:
+    """The paper's frequency sweep as a pure function: minimize energy over
+    the grid subject to the slowdown budget (and optional power cap)."""
+    t0 = chip.step_time(profile, 1.0)
+    e0 = chip.energy_j(profile, 1.0)
+    budget = t0 * (1.0 + slowdown_budget)
+    best_f, best_e = 1.0, e0
+    for f in chip.freq_grid(n_freqs):
+        if power_cap_w is not None and chip.power_w(profile, f) > power_cap_w:
+            continue
+        t = chip.step_time(profile, f)
+        if t > budget * (1.0 + 1e-9):
+            continue
+        e = chip.energy_j(profile, f)
+        if e < best_e - 1e-12:
+            best_f, best_e = f, e
+    return Decision(
+        freq_mhz=chip.freq_mhz(best_f), freq_frac=best_f,
+        mode=chip.classify_mode(profile),
+        time_s=chip.step_time(profile, best_f),
+        power_w=chip.power_w(profile, best_f),
+        energy_j=best_e, baseline_energy_j=e0)
+
+
 class PowerGovernor:
     def __init__(self, cfg: GovernorConfig = GovernorConfig(),
                  chip: ChipSpec = TPU_V5E,
                  actuator: Optional[PowerActuator] = None):
         self.cfg = cfg
         self.chip = chip
+        self.model = ChipModel(chip)
         self.actuator = actuator or SimulatedActuator(chip)
 
     def freq_grid(self) -> List[float]:
-        lo = self.chip.f_min_mhz / self.chip.f_nominal_mhz
-        n = self.cfg.n_freqs
-        return [lo + (1.0 - lo) * i / (n - 1) for i in range(n)]
+        return self.model.freq_grid(self.cfg.n_freqs)
 
-    def choose(self, profile: pm.StepProfile) -> Decision:
-        chip = self.chip
-        t0 = pm.step_time(profile, 1.0)
-        e0 = pm.energy_j(profile, 1.0, chip)
-        budget = t0 * (1.0 + self.cfg.slowdown_budget)
-        best_f, best_e = 1.0, e0
-        for f in self.freq_grid():
-            if self.cfg.power_cap_w is not None:
-                if pm.power_w(profile, f, chip) > self.cfg.power_cap_w:
-                    continue
-            t = pm.step_time(profile, f)
-            if t > budget * (1.0 + 1e-9):
-                continue
-            e = pm.energy_j(profile, f, chip)
-            if e < best_e - 1e-12:
-                best_f, best_e = f, e
-        freq_mhz = int(round(best_f * chip.f_nominal_mhz))
-        self.actuator.apply(freq_mhz)
-        return Decision(
-            freq_mhz=freq_mhz, freq_frac=best_f,
-            mode=pm.classify_mode(profile, chip),
-            time_s=pm.step_time(profile, best_f),
-            power_w=pm.power_w(profile, best_f, chip),
-            energy_j=best_e, baseline_energy_j=e0)
+    def choose(self, profile: StepProfile) -> Decision:
+        d = sweep_decision(profile, self.model,
+                           slowdown_budget=self.cfg.slowdown_budget,
+                           n_freqs=self.cfg.n_freqs,
+                           power_cap_w=self.cfg.power_cap_w)
+        self.actuator.apply(d.freq_mhz)
+        return d

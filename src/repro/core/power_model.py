@@ -20,14 +20,19 @@ Calibration to the paper's MI250X data: memory-only stress draws
 (380-89)/(560-89) = 0.62 of the dynamic span -> w_m = 0.62; compute-only
 (430-89)/(560-89) = 0.72 -> w_c = 0.72; w_c + w_m = 1.34 > 1 with the TDP
 cap reproduces the observed plateau.
+
+The canonical API is the bound :class:`ChipModel` object (exported as
+``repro.power.ChipModel``); the module-level free functions below it are
+thin deprecation shims kept so out-of-tree callers that still thread a
+``chip`` argument through every call keep working.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from typing import Tuple, Union
 
-from repro.core.hardware import ChipSpec, MODES, TPU_V5E, Mode
+from repro.core.hardware import CHIPS, ChipSpec, MODES, TPU_V5E, Mode
 
 W_COMPUTE = 0.72
 W_MEMORY = 0.62
@@ -47,75 +52,137 @@ class StepProfile:
         return max(self.compute_s, self.memory_s, self.collective_s, 1e-12)
 
 
-def step_time(profile: StepProfile, freq_frac: float) -> float:
-    return max(profile.compute_s / max(freq_frac, 1e-6),
-               profile.memory_s, profile.collective_s, 1e-12)
+class ChipModel:
+    """The power/performance transfer functions of one chip, bound to its
+    :class:`ChipSpec` — ``ChipModel(TPU_V5E).energy_j(profile, f)`` instead
+    of threading ``chip`` through every free-function call.
 
-
-def utilizations(profile: StepProfile, freq_frac: float
-                 ) -> Tuple[float, float, float]:
-    t = step_time(profile, freq_frac)
-    return (profile.compute_s / max(freq_frac, 1e-6) / t,
-            profile.memory_s / t,
-            profile.collective_s / t)
-
-
-def power_w(profile: StepProfile, freq_frac: float,
-            chip: ChipSpec = TPU_V5E) -> float:
-    u_c, u_m, u_n = utilizations(profile, freq_frac)
-    span = chip.tdp_w - chip.idle_w
-    p = chip.idle_w + span * (W_COMPUTE * u_c * freq_frac ** GAMMA
-                              + W_MEMORY * u_m + W_NETWORK * u_n)
-    return min(p, chip.tdp_w)
-
-
-def energy_j(profile: StepProfile, freq_frac: float,
-             chip: ChipSpec = TPU_V5E) -> float:
-    return power_w(profile, freq_frac, chip) * step_time(profile, freq_frac)
-
-
-def freq_for_power_cap(profile: StepProfile, cap_w: float,
-                       chip: ChipSpec = TPU_V5E,
-                       grid: int = 64) -> float:
-    """RAPL-style enforcement: highest frequency with predicted power <= cap."""
-    lo = chip.f_min_mhz / chip.f_nominal_mhz
-    best = lo
-    for i in range(grid + 1):
-        f = lo + (1.0 - lo) * i / grid
-        if power_w(profile, f, chip) <= cap_w:
-            best = max(best, f)
-    return best
-
-
-def classify_mode(profile: StepProfile, chip: ChipSpec = TPU_V5E,
-                  freq_frac: float = 1.0) -> Mode:
-    """Structural mode classification from the roofline profile. The paper
-    must *infer* the mode from power alone (power-only telemetry); sitting
-    above the compiler we know the roofline terms exactly — the inverse
-    inference lives in :func:`classify_mode_from_power` for fleet telemetry.
+    Accepts a spec, a chip name from :data:`repro.core.hardware.CHIPS`, or
+    another ``ChipModel`` (copy-construction), so APIs can take any of the
+    three interchangeably.
     """
-    u_c, u_m, u_n = utilizations(profile, freq_frac)
-    if u_n >= max(u_c, u_m):
-        return MODES[0]                       # network/latency bound
-    if u_m >= u_c:
-        return MODES[1]                       # memory intensive
-    return MODES[2]                           # compute intensive
 
+    __slots__ = ("spec",)
 
-def classify_mode_from_power(p_w: float, chip: ChipSpec = TPU_V5E) -> Mode:
-    """Paper-faithful power-band inference, MI250X bands rescaled to the
-    chip's (idle, TDP) envelope (Table IV)."""
-    frac = (p_w - chip.idle_w) / (chip.tdp_w - chip.idle_w)
-    # paper bands on MI250X: <=200 / 200-420 / 420-560 / >560 W
-    b1 = (200.0 - 89.0) / (560.0 - 89.0)   # 0.236
-    b2 = (420.0 - 89.0) / (560.0 - 89.0)   # 0.703
-    if frac <= b1:
-        return MODES[0]
-    if frac <= b2:
-        return MODES[1]
-    if frac <= 1.0 - 1e-9:
-        return MODES[2]
-    return MODES[3]
+    def __init__(self, chip: Union[ChipSpec, str, "ChipModel"] = TPU_V5E):
+        if isinstance(chip, ChipModel):
+            chip = chip.spec
+        elif isinstance(chip, str):
+            try:
+                chip = CHIPS[chip]
+            except KeyError:
+                raise KeyError(
+                    f"unknown chip {chip!r}; known: {sorted(CHIPS)}") from None
+        self.spec: ChipSpec = chip
+
+    def __repr__(self) -> str:
+        return f"ChipModel({self.spec.name!r})"
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, ChipModel) and other.spec == self.spec
+
+    def __hash__(self) -> int:
+        return hash(self.spec)
+
+    # ------------------------------------------------------------ frequency
+    @property
+    def f_min_frac(self) -> float:
+        return self.spec.f_min_mhz / self.spec.f_nominal_mhz
+
+    def freq_frac(self, freq_mhz: float) -> float:
+        """MHz -> fraction of nominal, clamped to the chip's DVFS range."""
+        return min(max(freq_mhz / self.spec.f_nominal_mhz, self.f_min_frac),
+                   1.0)
+
+    def freq_mhz(self, freq_frac: float) -> int:
+        return int(round(freq_frac * self.spec.f_nominal_mhz))
+
+    def freq_grid(self, n: int) -> list:
+        """``n`` evenly spaced frequency fractions spanning [f_min, f_nom].
+        A single-point grid degenerates to nominal frequency."""
+        if n < 1:
+            raise ValueError(f"freq_grid needs n >= 1, got {n}")
+        if n == 1:
+            return [1.0]
+        lo = self.f_min_frac
+        return [lo + (1.0 - lo) * i / (n - 1) for i in range(n)]
+
+    # ----------------------------------------------------- transfer surface
+    def step_time(self, profile: StepProfile, freq_frac: float = 1.0
+                  ) -> float:
+        return max(profile.compute_s / max(freq_frac, 1e-6),
+                   profile.memory_s, profile.collective_s, 1e-12)
+
+    def utilizations(self, profile: StepProfile, freq_frac: float = 1.0
+                     ) -> Tuple[float, float, float]:
+        t = self.step_time(profile, freq_frac)
+        return (profile.compute_s / max(freq_frac, 1e-6) / t,
+                profile.memory_s / t,
+                profile.collective_s / t)
+
+    def power_w(self, profile: StepProfile, freq_frac: float = 1.0) -> float:
+        u_c, u_m, u_n = self.utilizations(profile, freq_frac)
+        spec = self.spec
+        span = spec.tdp_w - spec.idle_w
+        p = spec.idle_w + span * (W_COMPUTE * u_c * freq_frac ** GAMMA
+                                  + W_MEMORY * u_m + W_NETWORK * u_n)
+        return min(p, spec.tdp_w)
+
+    def energy_j(self, profile: StepProfile, freq_frac: float = 1.0) -> float:
+        return self.power_w(profile, freq_frac) \
+            * self.step_time(profile, freq_frac)
+
+    def freq_for_power_cap(self, profile: StepProfile, cap_w: float,
+                           grid: int = 64) -> float:
+        """RAPL-style enforcement: highest frequency with power <= cap."""
+        lo = self.f_min_frac
+        best = lo
+        for i in range(grid + 1):
+            f = lo + (1.0 - lo) * i / grid
+            if self.power_w(profile, f) <= cap_w:
+                best = max(best, f)
+        return best
+
+    # -------------------------------------------------- mode classification
+    def classify_mode(self, profile: StepProfile,
+                      freq_frac: float = 1.0) -> Mode:
+        """Structural mode classification from the roofline profile. The
+        paper must *infer* the mode from power alone (power-only telemetry);
+        sitting above the compiler we know the roofline terms exactly — the
+        inverse inference is :meth:`classify_mode_from_power`."""
+        u_c, u_m, u_n = self.utilizations(profile, freq_frac)
+        if u_n >= max(u_c, u_m):
+            return MODES[0]                   # network/latency bound
+        if u_m >= u_c:
+            return MODES[1]                   # memory intensive
+        return MODES[2]                       # compute intensive
+
+    def classify_mode_from_power(self, p_w: float) -> Mode:
+        """Paper-faithful power-band inference, MI250X bands rescaled to the
+        chip's (idle, TDP) envelope (Table IV)."""
+        spec = self.spec
+        frac = (p_w - spec.idle_w) / (spec.tdp_w - spec.idle_w)
+        # paper bands on MI250X: <=200 / 200-420 / 420-560 / >560 W
+        b1 = (200.0 - 89.0) / (560.0 - 89.0)   # 0.236
+        b2 = (420.0 - 89.0) / (560.0 - 89.0)   # 0.703
+        if frac <= b1:
+            return MODES[0]
+        if frac <= b2:
+            return MODES[1]
+        if frac <= 1.0 - 1e-9:
+            return MODES[2]
+        return MODES[3]
+
+    # ----------------------------------------------------- profile builders
+    def vai_profile(self, ai: float, n_elems: int, loopsize: int,
+                    itemsize: int = 4) -> StepProfile:
+        """Roofline position of one VAI pass (paper Algorithm 1)."""
+        flops = 2.0 * loopsize * n_elems
+        byts = (4 if loopsize else 2) * n_elems * itemsize
+        # VAI is a VPU (vector) workload, not MXU: peak vector flops ~ peak/8
+        vector_peak = self.spec.peak_flops / 8.0
+        return StepProfile(compute_s=flops / vector_peak,
+                           memory_s=byts / self.spec.hbm_bw)
 
 
 def profile_from_roofline(compute_s: float, memory_s: float,
@@ -123,12 +190,59 @@ def profile_from_roofline(compute_s: float, memory_s: float,
     return StepProfile(compute_s, memory_s, collective_s)
 
 
+# ---------------------------------------------------------------------------
+# Deprecated chip-threaded free functions. Thin shims over ChipModel, kept
+# for out-of-tree callers; in-tree code goes through repro.power.
+# ---------------------------------------------------------------------------
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"repro.core.power_model.{name} is deprecated; use "
+        f"repro.power.ChipModel.{name} instead",
+        DeprecationWarning, stacklevel=3)
+
+
+def step_time(profile: StepProfile, freq_frac: float) -> float:
+    _deprecated("step_time")
+    return ChipModel(TPU_V5E).step_time(profile, freq_frac)
+
+
+def utilizations(profile: StepProfile, freq_frac: float
+                 ) -> Tuple[float, float, float]:
+    _deprecated("utilizations")
+    return ChipModel(TPU_V5E).utilizations(profile, freq_frac)
+
+
+def power_w(profile: StepProfile, freq_frac: float,
+            chip: ChipSpec = TPU_V5E) -> float:
+    _deprecated("power_w")
+    return ChipModel(chip).power_w(profile, freq_frac)
+
+
+def energy_j(profile: StepProfile, freq_frac: float,
+             chip: ChipSpec = TPU_V5E) -> float:
+    _deprecated("energy_j")
+    return ChipModel(chip).energy_j(profile, freq_frac)
+
+
+def freq_for_power_cap(profile: StepProfile, cap_w: float,
+                       chip: ChipSpec = TPU_V5E,
+                       grid: int = 64) -> float:
+    _deprecated("freq_for_power_cap")
+    return ChipModel(chip).freq_for_power_cap(profile, cap_w, grid)
+
+
+def classify_mode(profile: StepProfile, chip: ChipSpec = TPU_V5E,
+                  freq_frac: float = 1.0) -> Mode:
+    _deprecated("classify_mode")
+    return ChipModel(chip).classify_mode(profile, freq_frac)
+
+
+def classify_mode_from_power(p_w: float, chip: ChipSpec = TPU_V5E) -> Mode:
+    _deprecated("classify_mode_from_power")
+    return ChipModel(chip).classify_mode_from_power(p_w)
+
+
 def vai_profile(ai: float, n_elems: int, loopsize: int,
                 chip: ChipSpec = TPU_V5E, itemsize: int = 4) -> StepProfile:
-    """Roofline position of one VAI pass (paper Algorithm 1)."""
-    flops = 2.0 * loopsize * n_elems
-    byts = (4 if loopsize else 2) * n_elems * itemsize
-    # VAI is a VPU (vector) workload, not MXU: peak vector flops ~= peak/8
-    vector_peak = chip.peak_flops / 8.0
-    return StepProfile(compute_s=flops / vector_peak,
-                       memory_s=byts / chip.hbm_bw)
+    _deprecated("vai_profile")
+    return ChipModel(chip).vai_profile(ai, n_elems, loopsize, itemsize)

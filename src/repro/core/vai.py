@@ -1,8 +1,9 @@
 """VAI sweep driver (paper §IV-A, Figs. 4/5) — runs the Pallas VAI kernel
 across arithmetic intensities under every frequency and power cap, recording
 runtime / power / energy via the calibrated power model (the Frontier rails
-are replaced by :mod:`repro.core.power_model` on this container; on real
-hardware the same driver reads the platform's power channel).
+are replaced by the calibrated :class:`repro.power.ChipModel` on this
+container; on real hardware the same driver reads the platform's power
+channel).
 """
 from __future__ import annotations
 
@@ -15,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_vai import VAISuiteConfig
-from repro.core import power_model as pm
+from repro.core.power_model import ChipModel
 from repro.core.hardware import ChipSpec, TPU_V5E
 from repro.kernels import ops as kops
 from repro.kernels import vai as vai_kernel
@@ -49,6 +50,7 @@ def run_sweep(cfg: VAISuiteConfig = VAISuiteConfig(),
     actually runs the Pallas kernel (interpret mode on CPU) for a subset of
     elements to validate numerics; the (time, power) surface comes from the
     calibrated model."""
+    model = ChipModel(chip)
     points: List[VAIPoint] = []
     rows = max(cfg.elements // vai_kernel.LANE, vai_kernel.LANE)
     key = jax.random.PRNGKey(0)
@@ -62,17 +64,17 @@ def run_sweep(cfg: VAISuiteConfig = VAISuiteConfig(),
         if execute_kernel and L <= 64:   # CPU-interpret budget
             out = kops.vai_op(a, b, c, loopsize=L)
             out.block_until_ready()
-        profile = pm.vai_profile(ai, cfg.elements, L, chip)
-        t0 = pm.step_time(profile, 1.0)
-        e0 = pm.energy_j(profile, 1.0, chip)
+        profile = model.vai_profile(ai, cfg.elements, L)
+        t0 = model.step_time(profile, 1.0)
+        e0 = model.energy_j(profile, 1.0)
         flops, byts = vai_kernel.vai_flops_bytes(cfg.elements, L)
 
         for f_mhz in cfg.frequencies_mhz:
             frac = f_mhz / chip.f_nominal_mhz * (
                 chip.f_nominal_mhz / 1700)   # grid defined on 1700 nominal
             frac = min(max(frac, chip.f_min_mhz / chip.f_nominal_mhz), 1.0)
-            t = pm.step_time(profile, frac)
-            p = pm.power_w(profile, frac, chip)
+            t = model.step_time(profile, frac)
+            p = model.power_w(profile, frac)
             points.append(VAIPoint(
                 ai=ai, loopsize=L, freq_mhz=f_mhz, power_cap_w=None,
                 tflops=flops / t / 1e12, gbytes_s=byts / t / 1e9,
@@ -80,9 +82,9 @@ def run_sweep(cfg: VAISuiteConfig = VAISuiteConfig(),
 
         for cap_frac in (1.0, 0.9, 0.72, 0.54, 0.36, 0.25, 0.18):
             cap_w = cap_frac * chip.tdp_w
-            frac = pm.freq_for_power_cap(profile, cap_w, chip)
-            t = pm.step_time(profile, frac)
-            p = pm.power_w(profile, frac, chip)
+            frac = model.freq_for_power_cap(profile, cap_w)
+            t = model.step_time(profile, frac)
+            p = model.power_w(profile, frac)
             points.append(VAIPoint(
                 ai=ai, loopsize=L, freq_mhz=int(frac * chip.f_nominal_mhz),
                 power_cap_w=cap_w,

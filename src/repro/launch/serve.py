@@ -1,7 +1,7 @@
-"""Serving driver: batched generation with energy telemetry + governor.
+"""Serving driver: batched generation with energy telemetry + power policy.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
-        --reduced --batch 4 --new-tokens 16 --governor
+        --reduced --batch 4 --new-tokens 16 --policy energy-aware
 """
 from __future__ import annotations
 
@@ -13,8 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.governor import GovernorConfig, PowerGovernor
-from repro.core.telemetry import TelemetryStore
+from repro.power import EnergySession
 from repro.models import model as model_mod
 from repro.models.transformer import Runtime
 from repro.serving import Request, ServeEngine
@@ -28,7 +27,14 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--governor", action="store_true")
+    ap.add_argument("--policy", default=None,
+                    choices=["nominal", "static", "power-cap",
+                             "energy-aware"])
+    ap.add_argument("--governor", action="store_true",
+                    help="deprecated: same as --policy energy-aware")
+    ap.add_argument("--slowdown-budget", type=float, default=0.0)
+    ap.add_argument("--freq-mhz", type=int, default=None)
+    ap.add_argument("--power-cap-w", type=float, default=None)
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
@@ -38,10 +44,15 @@ def main() -> None:
     rt = Runtime(tp=1, moe_impl="local")
     params, _ = model_mod.init_params(cfg, rt, jax.random.PRNGKey(0))
 
-    telemetry = TelemetryStore()
-    governor = PowerGovernor(GovernorConfig()) if args.governor else None
+    # explicit --policy wins; --governor is the deprecated alias (same
+    # precedence as TrainConfig.resolved_policy)
+    policy = args.policy or ("energy-aware" if args.governor else "nominal")
+    session = EnergySession(policy=policy,
+                            slowdown_budget=args.slowdown_budget,
+                            freq_mhz=args.freq_mhz,
+                            cap_w=args.power_cap_w)
     engine = ServeEngine(cfg, rt, params, max_len=args.max_len,
-                         governor=governor, telemetry=telemetry)
+                         session=session)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, args.prompt_len,
                                         dtype=np.int32),
@@ -57,8 +68,10 @@ def main() -> None:
                            extra_batch=extra)
     for i, o in enumerate(outs[: min(4, len(outs))]):
         print(f"req{i}: {o.tolist()}")
-    print(f"energy {telemetry.total_energy_j():.1f} J  "
-          f"mode-hours {telemetry.mode_hours_pct()}")
+    s = session.summary()
+    print(f"policy {s['policy']}  energy {s['energy_j']:.1f} J  "
+          f"savings {s['savings_pct']:.1f}%  "
+          f"mode-hours {s['mode_hours_pct']}")
 
 
 if __name__ == "__main__":

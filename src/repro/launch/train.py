@@ -1,18 +1,18 @@
 """End-to-end training driver: energy-aware runtime + fault tolerance.
 
 Per step: run the compiled train_step, feed its (measured or dry-run-derived)
-roofline profile to the DVFS governor, record telemetry, checkpoint on the
-configured cadence, and watch for stragglers. Restart resumes from the
-latest committed checkpoint with byte-identical data-pipeline alignment.
+roofline profile to the selected power policy through an ``EnergySession``,
+record telemetry, checkpoint on the configured cadence, and watch for
+stragglers. Restart resumes from the latest committed checkpoint with
+byte-identical data-pipeline alignment.
 
 CPU usage (reduced configs):
     PYTHONPATH=src python -m repro.launch.train --arch stablelm-12b \
-        --steps 30 --reduced --governor
+        --steps 30 --reduced --policy energy-aware
 """
 from __future__ import annotations
 
 import argparse
-import collections
 import dataclasses
 import time
 from typing import Dict, Optional
@@ -22,12 +22,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import SHAPES_BY_NAME, ShapeConfig, get_config
-from repro.core import power_model as pm
-from repro.core.governor import GovernorConfig, PowerGovernor
-from repro.core.hardware import TPU_V5E
-from repro.core.telemetry import StepSample, TelemetryStore
+from repro.power import EnergySession, StepProfile, TPU_V5E
+from repro.power.policies import PolicyLike
 from repro.checkpoint import Checkpointer, restore
-from repro.data import SyntheticPipeline, make_batch
+from repro.data import SyntheticPipeline
 from repro.launch import steps as steps_mod
 from repro.models import model as model_mod
 from repro.models.transformer import Runtime
@@ -61,10 +59,18 @@ class TrainConfig:
     steps: int = 30
     ckpt_dir: Optional[str] = None
     ckpt_interval: int = 10
-    governor: bool = False
+    policy: PolicyLike = None           # name, PowerPolicy object, or None
+    governor: bool = False              # deprecated alias: policy="energy-aware"
     slowdown_budget: float = 0.0
+    freq_mhz: Optional[int] = None      # knob for policy="static"
+    power_cap_w: Optional[float] = None  # knob for policy="power-cap"
     seed: int = 0
     log_every: int = 5
+
+    def resolved_policy(self) -> PolicyLike:
+        if self.policy is not None:
+            return self.policy
+        return "energy-aware" if self.governor else "nominal"
 
 
 class Trainer:
@@ -73,9 +79,11 @@ class Trainer:
                  tcfg: TrainConfig = TrainConfig()):
         self.cfg, self.shape, self.rt = cfg, shape, rt
         self.opt_cfg, self.tcfg = opt_cfg, tcfg
-        self.telemetry = TelemetryStore(window_s=15.0)
-        self.governor = (PowerGovernor(GovernorConfig(
-            slowdown_budget=tcfg.slowdown_budget)) if tcfg.governor else None)
+        self.session = EnergySession(
+            policy=tcfg.resolved_policy(), chip=TPU_V5E, window_s=15.0,
+            slowdown_budget=tcfg.slowdown_budget, freq_mhz=tcfg.freq_mhz,
+            cap_w=tcfg.power_cap_w)
+        self.telemetry = self.session.telemetry
         self.watchdog = StragglerWatchdog()
         self.checkpointer = (Checkpointer(tcfg.ckpt_dir, tcfg.ckpt_interval)
                              if tcfg.ckpt_dir else None)
@@ -103,11 +111,25 @@ class Trainer:
         batch = self.pipeline.batch_at(step)
         return {k: jnp.asarray(v) for k, v in batch.items()}
 
+    def _step_profile(self) -> StepProfile:
+        # roofline profile for the step: on CPU the wall-clock is
+        # meaningless for TPU power, so we synthesize the profile from the
+        # model-flops at the reduced scale; launch on real hardware replaces
+        # this with the dry-run-derived profile.
+        from repro.core.roofline import model_flops
+        flops = model_flops(self.cfg, self.shape) * 3  # fwd+bwd
+        return StepProfile(
+            compute_s=flops / TPU_V5E.peak_flops,
+            memory_s=flops / TPU_V5E.peak_flops * 0.6,
+            collective_s=0.0)
+
     def run(self) -> Dict:
         if self.state is None:
             self.init_or_restore()
         losses = []
         n_hosts = max(jax.process_count(), 1)
+        profile = self._step_profile()
+        energy_aware = self.session.policy.name != "nominal"
         for step in range(self.start_step, self.tcfg.steps):
             batch = self._device_batch(step)
             t0 = time.perf_counter()
@@ -115,19 +137,18 @@ class Trainer:
             jax.block_until_ready(metrics["loss"])
             wall = time.perf_counter() - t0
             self.watchdog.record(jax.process_index() % n_hosts, wall)
-            self._record_energy(step, wall)
+            d = self.session.observe(step, profile, wall)
             loss = float(metrics["loss"])
             losses.append(loss)
             self.history.append({"step": step, "loss": loss, "wall_s": wall})
+            if energy_aware:
+                self.history[-1]["gov"] = {
+                    "freq_mhz": d.freq_mhz, "savings_pct": d.savings_pct}
             if self.checkpointer is not None:
                 self.checkpointer.maybe_save(step + 1, self.state)
             if step % self.tcfg.log_every == 0:
-                extra = ""
-                if self.governor is not None and self.history:
-                    d = self.history[-1].get("gov")
-                    if d:
-                        extra = (f" f={d['freq_mhz']}MHz "
-                                 f"sav={d['savings_pct']:.1f}%")
+                extra = (f" f={d.freq_mhz}MHz sav={d.savings_pct:.1f}%"
+                         if energy_aware else "")
                 print(f"step {step:5d} loss {loss:.4f} "
                       f"wall {wall*1e3:.0f}ms{extra}", flush=True)
         if self.checkpointer is not None:
@@ -136,36 +157,7 @@ class Trainer:
             self.checkpointer.wait()
         return {"losses": losses,
                 "stragglers": self.watchdog.stragglers(),
-                "energy_j": self.telemetry.total_energy_j()}
-
-    # ---------------------------------------------------------- telemetry
-    def _record_energy(self, step: int, wall_s: float) -> None:
-        # roofline profile for the step: on CPU the wall-clock is
-        # meaningless for TPU power, so we synthesize the profile from the
-        # model-flops at the reduced scale; launch on real hardware replaces
-        # this with the dry-run-derived profile.
-        from repro.core.roofline import model_flops
-        flops = model_flops(self.cfg, self.shape) * 3  # fwd+bwd
-        prof = pm.StepProfile(
-            compute_s=flops / TPU_V5E.peak_flops,
-            memory_s=flops / TPU_V5E.peak_flops * 0.6,
-            collective_s=0.0)
-        if self.governor is not None:
-            d = self.governor.choose(prof)
-            if self.history:
-                self.history[-1]["gov"] = {
-                    "freq_mhz": d.freq_mhz, "savings_pct": d.savings_pct}
-            self.telemetry.record(StepSample(
-                step=step, t=step * d.time_s, duration_s=d.time_s,
-                power_w=d.power_w, energy_j=d.energy_j, mode=d.mode.idx,
-                freq_mhz=d.freq_mhz))
-        else:
-            p = pm.power_w(prof, 1.0)
-            self.telemetry.record(StepSample(
-                step=step, t=step * prof.total_s,
-                duration_s=prof.total_s, power_w=p,
-                energy_j=p * prof.total_s,
-                mode=pm.classify_mode(prof).idx, freq_mhz=1700))
+                "energy_j": self.session.total_energy_j()}
 
 
 def main() -> None:
@@ -177,8 +169,17 @@ def main() -> None:
                     help="CPU-sized config (required off-TPU)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-interval", type=int, default=10)
-    ap.add_argument("--governor", action="store_true")
+    ap.add_argument("--policy", default=None,
+                    choices=["nominal", "static", "power-cap",
+                             "energy-aware"],
+                    help="power policy (see repro.power.POLICIES)")
+    ap.add_argument("--governor", action="store_true",
+                    help="deprecated: same as --policy energy-aware")
     ap.add_argument("--slowdown-budget", type=float, default=0.0)
+    ap.add_argument("--freq-mhz", type=int, default=None,
+                    help="set-point for --policy static")
+    ap.add_argument("--power-cap-w", type=float, default=None,
+                    help="cap for --policy power-cap")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -190,8 +191,10 @@ def main() -> None:
     rt = Runtime(tp=1, moe_impl="local")
     tcfg = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
                        ckpt_interval=args.ckpt_interval,
-                       governor=args.governor,
-                       slowdown_budget=args.slowdown_budget, seed=args.seed)
+                       policy=args.policy, governor=args.governor,
+                       slowdown_budget=args.slowdown_budget,
+                       freq_mhz=args.freq_mhz,
+                       power_cap_w=args.power_cap_w, seed=args.seed)
     trainer = Trainer(cfg, shape, rt, tcfg=tcfg)
     out = trainer.run()
     print(f"final loss {out['losses'][-1]:.4f}  "

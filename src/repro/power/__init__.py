@@ -1,0 +1,61 @@
+"""`repro.power` — the single public surface for power management.
+
+The paper's core loop is: profile a step, pick a frequency/cap, record
+telemetry, project fleet savings. This package exposes each stage as one
+object and composes them:
+
+chip      — :class:`ChipModel`: chip-bound (time, power, energy) transfer
+            functions under DVFS and power caps
+policies  — :class:`PowerPolicy` protocol + ``nominal`` / ``static`` /
+            ``power-cap`` / ``energy-aware`` implementations, selected by
+            name via :func:`get_policy`
+session   — :class:`EnergySession`: policy + actuator + telemetry behind a
+            single ``observe(step, profile, wall_s)`` call
+fleet     — :class:`FleetAnalysis`: chained telemetry -> modal -> projection
+            pipeline (``from_store(ts).decompose().project(caps)``)
+
+Typical driver:
+
+    from repro.power import EnergySession, FleetAnalysis, StepProfile
+
+    with EnergySession(policy="energy-aware") as sess:
+        for step in range(n_steps):
+            ...
+            sess.observe(step, profile, wall_s)
+    rows = sess.fleet().decompose().project([900])
+
+The legacy entry points (`repro.core.power_model` free functions,
+`repro.core.governor.PowerGovernor`) remain as thin shims over this layer.
+"""
+from repro.core.governor import (  # noqa: F401
+    Decision, GovernorConfig, PowerActuator, PowerGovernor,
+    SimulatedActuator, sweep_decision)
+from repro.core.projection import (  # noqa: F401
+    ProjectionRow, domain_targeted_project, project, validate_against_paper)
+from repro.core.telemetry import (  # noqa: F401
+    JobLog, JobRecord, StepSample, TelemetryStore)
+from repro.power.chip import (  # noqa: F401
+    CHIPS, ChipModel, ChipSpec, MI250X_GCD, MODES, Mode, StepProfile,
+    TPU_V5E, profile_from_roofline)
+from repro.power.policies import (  # noqa: F401
+    POLICIES, EnergyAwarePolicy, NominalPolicy, PowerCapPolicy, PowerPolicy,
+    StaticFrequencyPolicy, get_policy)
+from repro.power.session import EnergySession  # noqa: F401
+from repro.power.fleet import FleetAnalysis  # noqa: F401
+
+__all__ = [
+    # chip model
+    "CHIPS", "ChipModel", "ChipSpec", "MI250X_GCD", "MODES", "Mode",
+    "StepProfile", "TPU_V5E", "profile_from_roofline",
+    # policies
+    "POLICIES", "PowerPolicy", "NominalPolicy", "StaticFrequencyPolicy",
+    "PowerCapPolicy", "EnergyAwarePolicy", "get_policy",
+    # decisions / actuation / legacy governor
+    "Decision", "GovernorConfig", "PowerActuator", "PowerGovernor",
+    "SimulatedActuator", "sweep_decision",
+    # session + telemetry
+    "EnergySession", "JobLog", "JobRecord", "StepSample", "TelemetryStore",
+    # fleet pipeline
+    "FleetAnalysis", "ProjectionRow", "domain_targeted_project", "project",
+    "validate_against_paper",
+]

@@ -1,0 +1,121 @@
+"""FleetAnalysis — the telemetry -> modal -> projection pipeline, chained.
+
+The paper's fleet methodology is three steps run in sequence: collect power
+samples (§III), decompose them into modes (§V-A/B, Table IV), project the
+savings of a cap schedule (§V-C, Tables V/VI). Examples and benchmarks used
+to wire `repro.core.{telemetry,modal,projection}` together by hand;
+``FleetAnalysis`` is that wiring as one chainable object:
+
+    rows = FleetAnalysis.from_store(ts).decompose().project([900])
+
+Construct from a live :class:`TelemetryStore`, a raw power-sample array, or
+the paper-calibrated synthetic fleet.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.hardware import ChipSpec, MI250X_GCD
+from repro.core.modal import (ModalDecomposition, decompose, detect_peaks,
+                              power_histogram, synth_fleet_powers)
+from repro.core.projection import (ProjectionRow, domain_targeted_project,
+                                   project_from_decomposition)
+from repro.core.telemetry import TelemetryStore
+
+
+class FleetAnalysis:
+    """Chained fleet-power analysis over one array of power samples."""
+
+    def __init__(self, powers: np.ndarray, chip: ChipSpec = MI250X_GCD,
+                 sample_interval_s: float = 15.0):
+        self.powers = np.asarray(powers, dtype=np.float64)
+        self.chip = chip
+        self.sample_interval_s = sample_interval_s
+        self.decomposition: Optional[ModalDecomposition] = None
+
+    # --------------------------------------------------------- constructors
+    @classmethod
+    def from_store(cls, store: TelemetryStore,
+                   chip: ChipSpec = MI250X_GCD,
+                   sample_interval_s: Optional[float] = None
+                   ) -> "FleetAnalysis":
+        """Analyze the windowed mean powers of a live telemetry store; the
+        sample interval defaults to the store's aggregation window."""
+        interval = sample_interval_s if sample_interval_s is not None \
+            else store.window_s
+        return cls(store.powers(), chip=chip, sample_interval_s=interval)
+
+    @classmethod
+    def from_powers(cls, powers: np.ndarray, chip: ChipSpec = MI250X_GCD,
+                    sample_interval_s: float = 15.0) -> "FleetAnalysis":
+        return cls(powers, chip=chip, sample_interval_s=sample_interval_s)
+
+    @classmethod
+    def synthetic(cls, n_samples: int, seed: int = 0,
+                  hours_pct: Optional[Dict[int, float]] = None,
+                  chip: ChipSpec = MI250X_GCD,
+                  sample_interval_s: float = 15.0) -> "FleetAnalysis":
+        """The paper-calibrated synthetic fleet (Table IV GPU-hours split)
+        — the stand-in for the non-public Frontier dataset."""
+        return cls(synth_fleet_powers(n_samples, seed=seed,
+                                      hours_pct=hours_pct, chip=chip),
+                   chip=chip, sample_interval_s=sample_interval_s)
+
+    # ---------------------------------------------------------------- modal
+    def decompose(self) -> "FleetAnalysis":
+        """Modal decomposition (Table IV); chainable — the result is kept on
+        ``self.decomposition``."""
+        self.decomposition = decompose(self.powers, self.sample_interval_s,
+                                       self.chip)
+        return self
+
+    def histogram(self, bins: int = 120,
+                  max_w: Optional[float] = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """Fleet power histogram (paper Fig. 8): (bin centers, density)."""
+        return power_histogram(self.powers, bins=bins, max_w=max_w)
+
+    def peaks(self, bins: int = 120, smooth: int = 3,
+              min_rel_height: float = 0.08) -> List[float]:
+        """Prevalent zones of operation (paper Figs. 8/9): the local maxima
+        of the smoothed power histogram, in watts."""
+        centers, hist = self.histogram(bins=bins)
+        return detect_peaks(centers, hist, smooth=smooth,
+                            min_rel_height=min_rel_height)
+
+    # ----------------------------------------------------------- projection
+    def _decomposition(self) -> ModalDecomposition:
+        if self.decomposition is None:
+            self.decompose()
+        return self.decomposition
+
+    def project(self, caps: List[float], kind: str = "freq"
+                ) -> List[ProjectionRow]:
+        """Project fleet savings for a cap schedule (Tables V/VI engine)
+        from this fleet's own modal energy split. ``kind`` is ``"freq"``
+        (MHz caps) or ``"power"`` (watt caps)."""
+        return project_from_decomposition(self._decomposition(), caps, kind)
+
+    def project_domains(self,
+                        domain_energies: Mapping[str, Tuple[float, float]],
+                        caps: List[float], kind: str = "freq"
+                        ) -> Dict[str, List[ProjectionRow]]:
+        """Table VI analogue: cap only selected science domains / job-size
+        classes. ``domain_energies``: name -> (E_CI, E_MI) MWh."""
+        e_total = self._decomposition().total_energy_mwh
+        return domain_targeted_project(domain_energies, caps, kind,
+                                       e_total_mwh=e_total)
+
+    # -------------------------------------------------------------- summary
+    def summary(self) -> dict:
+        d = self._decomposition()
+        return {
+            "chip": self.chip.name,
+            "samples": int(self.powers.size),
+            "hours_pct": d.hours_pct,
+            "energy_pct": d.energy_pct(),
+            "total_energy_mwh": d.total_energy_mwh,
+            "peaks_w": self.peaks(),
+        }

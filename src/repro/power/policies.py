@@ -1,0 +1,172 @@
+"""Pluggable power-management policies (the `repro.power` policy surface).
+
+The paper's governor is one point in a much wider policy space: static DVFS
+schedules (Calore et al., "Evaluation of DVFS techniques on modern HPC
+processors and accelerators"), RAPL-style power capping, and user-assisted
+eco-modes all pick a frequency per step from the same information — the
+step's roofline profile and the chip's transfer functions. ``PowerPolicy``
+is that seam: a pure ``decide(profile, chip) -> Decision`` call with no
+actuation or telemetry side effects (those belong to
+:class:`repro.power.EnergySession`).
+
+Policies are selected by name through :func:`get_policy` (``"nominal"``,
+``"static"``, ``"power-cap"``, ``"energy-aware"``) or passed as objects, so
+drivers no longer hard-code a ``governor: bool`` flag.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Protocol, Union, runtime_checkable
+
+from repro.core.governor import Decision, sweep_decision
+from repro.core.power_model import ChipModel, StepProfile
+
+
+@runtime_checkable
+class PowerPolicy(Protocol):
+    """A per-step frequency policy. Implementations must be pure: given the
+    same (profile, chip) they return the same Decision and touch nothing."""
+
+    name: str
+
+    def decide(self, profile: StepProfile, chip: ChipModel) -> Decision: ...
+
+
+def _decision_at(profile: StepProfile, chip: ChipModel,
+                 freq_frac: float) -> Decision:
+    e0 = chip.energy_j(profile, 1.0)
+    return Decision(
+        freq_mhz=chip.freq_mhz(freq_frac), freq_frac=freq_frac,
+        mode=chip.classify_mode(profile),
+        time_s=chip.step_time(profile, freq_frac),
+        power_w=chip.power_w(profile, freq_frac),
+        energy_j=chip.energy_j(profile, freq_frac),
+        baseline_energy_j=e0)
+
+
+@dataclass(frozen=True)
+class NominalPolicy:
+    """Run at nominal frequency — the uncapped baseline."""
+
+    name: str = field(default="nominal", init=False)
+
+    def decide(self, profile: StepProfile, chip: ChipModel) -> Decision:
+        return _decision_at(profile, chip, 1.0)
+
+
+@dataclass(frozen=True)
+class StaticFrequencyPolicy:
+    """A fixed DVFS set-point for the whole job (the static-schedule family
+    of Calore et al.); clamped to the chip's DVFS range."""
+
+    freq_mhz: int
+    name: str = field(default="static", init=False)
+
+    def __post_init__(self):
+        if self.freq_mhz <= 0:
+            raise ValueError(f"freq_mhz must be positive, got {self.freq_mhz}")
+
+    def decide(self, profile: StepProfile, chip: ChipModel) -> Decision:
+        return _decision_at(profile, chip, chip.freq_frac(self.freq_mhz))
+
+
+@dataclass(frozen=True)
+class PowerCapPolicy:
+    """RAPL-style power cap: the highest frequency whose predicted power
+    stays under ``cap_w`` (paper: "a power limit only affects codes
+    surpassing the limit, while a set frequency affects all")."""
+
+    cap_w: float
+    grid: int = 64
+    name: str = field(default="power-cap", init=False)
+
+    def __post_init__(self):
+        if self.cap_w <= 0:
+            raise ValueError(f"cap_w must be positive, got {self.cap_w}")
+
+    def decide(self, profile: StepProfile, chip: ChipModel) -> Decision:
+        f = chip.freq_for_power_cap(profile, self.cap_w, self.grid)
+        return _decision_at(profile, chip, f)
+
+
+@dataclass(frozen=True)
+class EnergyAwarePolicy:
+    """The paper's per-step energy-minimizing sweep (today's
+    ``PowerGovernor``) behind the policy protocol. Decisions are bit-for-bit
+    those of ``PowerGovernor.choose`` — both call
+    :func:`repro.core.governor.sweep_decision`."""
+
+    slowdown_budget: float = 0.0
+    n_freqs: int = 11
+    power_cap_w: Optional[float] = None
+    name: str = field(default="energy-aware", init=False)
+
+    def __post_init__(self):
+        if self.n_freqs < 1:
+            raise ValueError(f"n_freqs must be >= 1, got {self.n_freqs}")
+
+    def decide(self, profile: StepProfile, chip: ChipModel) -> Decision:
+        return sweep_decision(profile, chip,
+                              slowdown_budget=self.slowdown_budget,
+                              n_freqs=self.n_freqs,
+                              power_cap_w=self.power_cap_w)
+
+
+# ---------------------------------------------------------------------------
+# Name-based selection: drivers accept "--policy <name>" and forward their
+# knob values; each factory picks out the knobs it understands.
+# ---------------------------------------------------------------------------
+def _make_nominal(**kw) -> NominalPolicy:
+    return NominalPolicy()
+
+
+def _make_static(freq_mhz: Optional[int] = None, **kw
+                 ) -> StaticFrequencyPolicy:
+    if freq_mhz is None:
+        raise ValueError("policy 'static' requires freq_mhz")
+    return StaticFrequencyPolicy(freq_mhz=freq_mhz)
+
+
+def _make_power_cap(cap_w: Optional[float] = None, **kw) -> PowerCapPolicy:
+    if cap_w is None:
+        raise ValueError("policy 'power-cap' requires cap_w")
+    return PowerCapPolicy(cap_w=cap_w)
+
+
+def _make_energy_aware(slowdown_budget: float = 0.0, n_freqs: int = 11,
+                       power_cap_w: Optional[float] = None,
+                       cap_w: Optional[float] = None, **kw
+                       ) -> EnergyAwarePolicy:
+    # cap_w is the shared driver knob (same flag drives "power-cap")
+    if power_cap_w is None:
+        power_cap_w = cap_w
+    return EnergyAwarePolicy(slowdown_budget=slowdown_budget,
+                             n_freqs=n_freqs, power_cap_w=power_cap_w)
+
+
+POLICIES: Dict[str, Callable[..., PowerPolicy]] = {
+    "nominal": _make_nominal,
+    "static": _make_static,
+    "power-cap": _make_power_cap,
+    "energy-aware": _make_energy_aware,
+}
+
+PolicyLike = Union[None, str, PowerPolicy]
+
+
+def get_policy(spec: PolicyLike = None, **knobs) -> PowerPolicy:
+    """Resolve a policy: ``None`` -> nominal, a name from :data:`POLICIES`
+    (with driver knobs like ``slowdown_budget=``, ``freq_mhz=``, ``cap_w=``),
+    or an existing policy object passed through unchanged."""
+    if spec is None:
+        spec = "nominal"
+    if isinstance(spec, str):
+        try:
+            factory = POLICIES[spec]
+        except KeyError:
+            raise KeyError(f"unknown power policy {spec!r}; "
+                           f"known: {sorted(POLICIES)}") from None
+        return factory(**knobs)
+    if hasattr(spec, "decide"):
+        return spec
+    raise TypeError(f"cannot resolve a PowerPolicy from {spec!r}")

@@ -1,0 +1,120 @@
+"""EnergySession — one object that owns the power-management loop.
+
+Every driver used to hand-roll the same block: build a governor (or not),
+build a ``TelemetryStore``, synthesize a ``StepSample`` per step with
+slightly different field spellings. ``EnergySession`` is that block, once:
+
+    with EnergySession(policy="energy-aware", chip=TPU_V5E) as sess:
+        for step in range(n):
+            ...run the compiled step...
+            sess.observe(step, profile, wall_s)
+    sess.total_energy_j()
+
+``observe`` asks the policy for a :class:`Decision`, applies it through the
+actuator, and records the resulting sample — the single write path into
+telemetry that `launch/train.py`, `serving/engine.py` and `launch/serve.py`
+previously each duplicated.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Deque, Optional, Union
+
+from repro.core.governor import PowerActuator, Decision, SimulatedActuator
+from repro.core.hardware import ChipSpec, TPU_V5E
+from repro.core.power_model import ChipModel, StepProfile
+from repro.core.telemetry import StepSample, TelemetryStore
+from repro.power.policies import PolicyLike, PowerPolicy, get_policy
+
+
+class EnergySession:
+    """Binds a :class:`PowerPolicy`, a :class:`ChipModel`, a
+    :class:`TelemetryStore` and a :class:`PowerActuator` behind one
+    ``observe(step, profile, wall_s)`` call."""
+
+    def __init__(self, policy: PolicyLike = None,
+                 chip: Union[ChipSpec, ChipModel, str] = TPU_V5E,
+                 telemetry: Optional[TelemetryStore] = None,
+                 actuator: Optional[PowerActuator] = None,
+                 window_s: float = 15.0, job_id: str = "job0",
+                 max_decisions: int = 100_000, **policy_knobs):
+        self.chip = ChipModel(chip)
+        self.policy: PowerPolicy = get_policy(policy, **policy_knobs)
+        self.telemetry = telemetry if telemetry is not None \
+            else TelemetryStore(window_s=window_s)
+        self.actuator: PowerActuator = actuator \
+            if actuator is not None else SimulatedActuator(self.chip.spec)
+        self.job_id = job_id
+        # bounded like TelemetryStore.windows: long-running jobs must not
+        # accumulate one Decision per step forever; aggregates below are
+        # running sums over ALL steps, the deque keeps recent ones for
+        # inspection
+        self.decisions: Deque[Decision] = collections.deque(
+            maxlen=max_decisions)
+        self.steps = 0
+        self.wall_s_total = 0.0
+        self._energy_sum = 0.0
+        self._baseline_energy_sum = 0.0
+
+    # ------------------------------------------------------------- observe
+    def observe(self, step: int, profile: StepProfile,
+                wall_s: Optional[float] = None) -> Decision:
+        """Record one step: policy decision -> actuation -> telemetry.
+
+        ``wall_s`` is the measured wall-clock of the step, kept for
+        reporting; the recorded (time, power, energy) come from the chip
+        model at the chosen frequency (this container has no power rails —
+        on real hardware the actuator/telemetry read the platform channel).
+        """
+        d = self.policy.decide(profile, self.chip)
+        self.actuator.apply(d.freq_mhz)
+        self.telemetry.record(StepSample(
+            step=step, t=step * d.time_s, duration_s=d.time_s,
+            power_w=d.power_w, energy_j=d.energy_j, mode=d.mode.idx,
+            freq_mhz=d.freq_mhz, job_id=self.job_id))
+        self.decisions.append(d)
+        self.steps += 1
+        self._energy_sum += d.energy_j
+        self._baseline_energy_sum += d.baseline_energy_j
+        if wall_s is not None:
+            self.wall_s_total += wall_s
+        return d
+
+    # ----------------------------------------------------------- lifecycle
+    def __enter__(self) -> "EnergySession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.telemetry.flush()
+
+    # ------------------------------------------------------------ analysis
+    def fleet(self):
+        """This session's telemetry as a :class:`repro.power.FleetAnalysis`,
+        classified against *this* chip's power envelope. (Building the
+        analysis by hand via ``FleetAnalysis.from_store`` defaults to the
+        paper's MI250X bands — wrong envelope for e.g. TPU telemetry.)"""
+        from repro.power.fleet import FleetAnalysis
+        return FleetAnalysis.from_store(self.telemetry, chip=self.chip.spec)
+
+    def total_energy_j(self) -> float:
+        return self.telemetry.total_energy_j()
+
+    def mode_hours_pct(self):
+        return self.telemetry.mode_hours_pct()
+
+    def savings_pct(self) -> float:
+        """Aggregate energy saved vs the nominal-frequency baseline."""
+        if self._baseline_energy_sum <= 0:
+            return 0.0
+        return 100.0 * (1.0 - self._energy_sum / self._baseline_energy_sum)
+
+    def summary(self) -> dict:
+        return {
+            "policy": self.policy.name,
+            "chip": self.chip.spec.name,
+            "steps": self.steps,
+            "energy_j": self.total_energy_j(),
+            "savings_pct": self.savings_pct(),
+            "mode_hours_pct": self.mode_hours_pct(),
+            "wall_s": self.wall_s_total,
+        }

@@ -1,22 +1,19 @@
 """Batched serving engine: prefill + synchronized batched decode with KV /
 state caches, greedy or temperature sampling, and per-step energy telemetry
-through the governor (decode is the paper's memory-intensive mode — the
-prime DVFS-savings regime)."""
+through an :class:`repro.power.EnergySession` (decode is the paper's
+memory-intensive mode — the prime DVFS-savings regime)."""
 from __future__ import annotations
 
-import dataclasses
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import power_model as pm
-from repro.core.governor import PowerGovernor
-from repro.core.telemetry import StepSample, TelemetryStore
+from repro.power import EnergySession, StepProfile
 from repro.models import decode as decode_mod
 from repro.models.transformer import Runtime
 
@@ -30,13 +27,11 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, rt: Runtime, params,
                  max_len: int = 256,
-                 governor: Optional[PowerGovernor] = None,
-                 telemetry: Optional[TelemetryStore] = None,
-                 profile: Optional[pm.StepProfile] = None):
+                 session: Optional[EnergySession] = None,
+                 profile: Optional[StepProfile] = None):
         self.cfg, self.rt, self.params = cfg, rt, params
         self.max_len = max_len
-        self.governor = governor
-        self.telemetry = telemetry
+        self.session = session
         self.profile = profile      # decode-step roofline profile (if known)
         self._prefill = jax.jit(
             lambda p, b: decode_mod.prefill(cfg, rt, p, b, max_len))
@@ -55,11 +50,19 @@ class ServeEngine:
     def generate(self, requests: List[Request], temperature: float = 0.0,
                  seed: int = 0, extra_batch: Optional[Dict] = None
                  ) -> List[np.ndarray]:
-        """Left-align prompts to a common length (pad with 0), prefill, then
-        decode all sequences in lock-step."""
+        """Left-align prompts to the batch max length (right-pad short ones
+        with token 0), prefill, then decode all sequences in lock-step.
+
+        Prompts at the batch max length decode exactly as if batched alone.
+        Shorter prompts see their pad tokens as context (prefill has no
+        per-sequence masking), so their continuations depend on the batch
+        max — batch same-length requests together when that matters."""
         B = len(requests)
-        plen = min(len(requests[0].prompt), self.max_len - 1)
-        prompts = np.stack([np.asarray(r.prompt[:plen]) for r in requests])
+        plen = min(max(len(r.prompt) for r in requests), self.max_len - 1)
+        prompts = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(requests):
+            p = np.asarray(r.prompt[:plen])
+            prompts[i, :len(p)] = p
         batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
         if extra_batch:
             batch.update(extra_batch)
@@ -69,7 +72,6 @@ class ServeEngine:
         max_new = min(max(r.max_new_tokens for r in requests),
                       self.max_len - plen)
         outs = []
-        t_wall = 0.0
         tok = None
         for i in range(max_new):
             key, sub = jax.random.split(key)
@@ -80,25 +82,13 @@ class ServeEngine:
             logits, state = self._decode(self.params, tok[:, None], pos,
                                          state)
             jax.block_until_ready(logits)
-            dt = time.perf_counter() - t0
-            self._record(i, dt)
-            t_wall += dt
+            self._record(i, time.perf_counter() - t0)
         gen = np.stack(outs, axis=1)                     # [B, max_new]
         return [gen[i] for i in range(B)]
 
     def _record(self, step: int, wall_s: float) -> None:
-        if self.telemetry is None:
+        if self.session is None:
             return
-        prof = self.profile or pm.StepProfile(
+        prof = self.profile or StepProfile(
             compute_s=wall_s * 0.1, memory_s=wall_s)
-        if self.governor is not None:
-            d = self.governor.choose(prof)
-            power, dur, mode = d.power_w, d.time_s, d.mode.idx
-            freq = d.freq_mhz
-        else:
-            power = pm.power_w(prof, 1.0)
-            dur, mode = prof.total_s, pm.classify_mode(prof).idx
-            freq = 1700
-        self.telemetry.record(StepSample(
-            step=step, t=step * dur, duration_s=dur, power_w=power,
-            energy_j=power * dur, mode=mode, freq_mhz=freq))
+        self.session.observe(step, prof, wall_s)

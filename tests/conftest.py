@@ -11,6 +11,33 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.configs import ARCH_IDS, get_config  # noqa: E402
 from repro.models.transformer import Runtime  # noqa: E402
 
+# ---------------------------------------------------------------------------
+# Optional hypothesis (declared in requirements-dev.txt / pyproject [dev]).
+# When absent, the suite must degrade to skips, not collection errors: the
+# stubs below turn every @given test into a skip while the deterministic
+# tests in the same module keep running.
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """stands in for `strategies`: any strategy call returns None, which
+        is fine because the stubbed @given never runs the test body."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
 
 @pytest.fixture(scope="session")
 def rt():

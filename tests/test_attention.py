@@ -6,6 +6,9 @@ import pytest
 
 from repro.models.attention import chunked_attention
 
+# long-running model/serving tests: fast lane skips these
+pytestmark = pytest.mark.slow
+
 
 def naive(q, k, v, causal=True, window=0, scale=None):
     B, Sq, Hq, Dk = q.shape

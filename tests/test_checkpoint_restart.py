@@ -14,6 +14,9 @@ from repro.configs import SHAPES_BY_NAME
 from repro.launch.train import TrainConfig, Trainer
 from repro.models.transformer import Runtime
 
+# long-running model/serving tests: fast lane skips these
+pytestmark = pytest.mark.slow
+
 
 def tree_equal(a, b):
     return all(bool(jnp.all(x == y))

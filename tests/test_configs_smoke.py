@@ -15,6 +15,9 @@ from repro.models import model as model_mod
 from repro.models.transformer import Runtime
 from repro.optim import OptConfig, init_opt_state
 
+# long-running model/serving tests: fast lane skips these
+pytestmark = pytest.mark.slow
+
 B, S = 2, 32
 
 

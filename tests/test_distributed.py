@@ -5,6 +5,9 @@ import pytest
 
 from conftest import run_subprocess
 
+# long-running model/serving tests: fast lane skips these
+pytestmark = pytest.mark.slow
+
 COMMON = r"""
 import dataclasses, jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
@@ -158,6 +161,7 @@ import repro.models.moe as moe_mod
 moe_mod.CAPACITY_FACTOR = 8.0
 from repro.models import decode as D
 from repro.models.common import ShardingRules
+
 
 cfg = reduced("deepseek-v3-671b")
 key = jax.random.PRNGKey(5)

@@ -1,7 +1,7 @@
 """Modal decomposition + governor policy invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st  # hypothesis, or skip-stubs
 
 from repro.core import power_model as pm
 from repro.core.governor import GovernorConfig, PowerGovernor

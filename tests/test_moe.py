@@ -9,6 +9,9 @@ import pytest
 from repro.configs.base import ModelConfig
 from repro.models import moe
 
+# long-running model/serving tests: fast lane skips these
+pytestmark = pytest.mark.slow
+
 
 def tiny_moe_cfg(E=4, k=2, shared=0):
     return ModelConfig(name="t", family="moe", n_layers=1, d_model=16,

@@ -1,0 +1,244 @@
+"""The `repro.power` public surface: policy/legacy-governor decision parity,
+EnergySession telemetry equivalence against the old hand-rolled
+``_record_energy`` blocks, and the chained FleetAnalysis pipeline against
+the validated projection engine."""
+import numpy as np
+import pytest
+
+from repro.core.modal import decompose, synth_fleet_powers
+from repro.core.projection import project_from_decomposition
+from repro.core.telemetry import StepSample, TelemetryStore
+from repro.power import (ChipModel, EnergyAwarePolicy, EnergySession,
+                         FleetAnalysis, GovernorConfig, NominalPolicy,
+                         PowerCapPolicy, PowerGovernor, StaticFrequencyPolicy,
+                         StepProfile, TPU_V5E, get_policy,
+                         validate_against_paper)
+
+CHIP = ChipModel(TPU_V5E)
+
+# a fixed grid of roofline positions spanning all modes
+PROFILE_GRID = [
+    StepProfile(c, m, n)
+    for c in (0.01, 0.2, 1.0)
+    for m in (0.01, 0.5, 1.0)
+    for n in (0.0, 0.3)
+]
+
+
+# ------------------------------------------------------------ policy parity
+@pytest.mark.parametrize("budget,n_freqs,cap_w", [
+    (0.0, 11, None), (0.112, 11, None), (0.3, 7, None),
+    (0.0, 11, 150.0), (0.05, 21, 180.0),
+])
+def test_energy_aware_matches_legacy_governor(budget, n_freqs, cap_w):
+    """EnergyAwarePolicy must reproduce PowerGovernor.choose bit-for-bit."""
+    pol = EnergyAwarePolicy(slowdown_budget=budget, n_freqs=n_freqs,
+                            power_cap_w=cap_w)
+    gov = PowerGovernor(GovernorConfig(slowdown_budget=budget,
+                                       n_freqs=n_freqs, power_cap_w=cap_w))
+    for p in PROFILE_GRID:
+        d_new = pol.decide(p, CHIP)
+        d_old = gov.choose(p)
+        assert d_new == d_old, (p, d_new, d_old)
+
+
+def test_nominal_policy_is_uncapped_baseline():
+    for p in PROFILE_GRID:
+        d = NominalPolicy().decide(p, CHIP)
+        assert d.freq_mhz == TPU_V5E.f_nominal_mhz
+        assert d.energy_j == d.baseline_energy_j
+        assert d.savings_pct == pytest.approx(0.0, abs=1e-9)
+
+
+def test_static_policy_clamps_to_dvfs_range():
+    p = StepProfile(0.2, 1.0)
+    assert StaticFrequencyPolicy(5000).decide(p, CHIP).freq_frac == 1.0
+    lo = StaticFrequencyPolicy(100).decide(p, CHIP)
+    assert lo.freq_frac == pytest.approx(TPU_V5E.f_min_mhz
+                                         / TPU_V5E.f_nominal_mhz)
+    d = StaticFrequencyPolicy(900).decide(p, CHIP)
+    assert d.freq_mhz == 900
+    # memory-bound: downclocking saves energy at no slowdown
+    assert d.energy_j < d.baseline_energy_j
+    assert d.time_s == pytest.approx(CHIP.step_time(p, 1.0))
+
+
+def test_power_cap_policy_meets_cap_or_floor():
+    f_min = TPU_V5E.f_min_mhz / TPU_V5E.f_nominal_mhz
+    for p in PROFILE_GRID:
+        for cap_w in (120.0, 160.0, 200.0):
+            d = PowerCapPolicy(cap_w=cap_w).decide(p, CHIP)
+            if d.power_w > cap_w + 1e-6:   # breach only at the DVFS floor
+                assert d.freq_frac == pytest.approx(f_min)
+
+
+# --------------------------------------------------------- policy selection
+def test_get_policy_resolution():
+    assert isinstance(get_policy(None), NominalPolicy)
+    assert isinstance(get_policy("nominal"), NominalPolicy)
+    pol = EnergyAwarePolicy(slowdown_budget=0.2)
+    assert get_policy(pol) is pol
+    assert get_policy("static", freq_mhz=900).freq_mhz == 900
+    assert get_policy("power-cap", cap_w=150.0).cap_w == 150.0
+    got = get_policy("energy-aware", slowdown_budget=0.1, n_freqs=21)
+    assert (got.slowdown_budget, got.n_freqs) == (0.1, 21)
+    # the shared driver knob cap_w feeds the energy-aware sweep's cap too
+    assert get_policy("energy-aware", cap_w=150.0).power_cap_w == 150.0
+    # irrelevant knobs are ignored so drivers can forward all their flags
+    assert isinstance(get_policy("nominal", freq_mhz=900, cap_w=1.0),
+                      NominalPolicy)
+
+
+def test_get_policy_errors():
+    with pytest.raises(KeyError):
+        get_policy("turbo")
+    with pytest.raises(ValueError):
+        get_policy("static")
+    with pytest.raises(ValueError):
+        get_policy("power-cap")
+    with pytest.raises(TypeError):
+        get_policy(42)
+
+
+def test_freq_grid_single_point_and_validation():
+    assert CHIP.freq_grid(1) == [1.0]
+    with pytest.raises(ValueError):
+        CHIP.freq_grid(0)
+    with pytest.raises(ValueError):
+        GovernorConfig(n_freqs=0)
+    with pytest.raises(ValueError):
+        EnergyAwarePolicy(n_freqs=0)
+    # n_freqs=1 used to divide by zero; now it degenerates to nominal
+    d = PowerGovernor(GovernorConfig(n_freqs=1)).choose(StepProfile(0.2, 1.0))
+    assert d.freq_mhz == TPU_V5E.f_nominal_mhz
+    assert d.savings_pct == pytest.approx(0.0, abs=1e-9)
+
+
+# ------------------------------------------------------ session equivalence
+def test_session_matches_old_governor_record_path():
+    """EnergySession.observe must write byte-identical telemetry to the old
+    `_record_energy` governor branch in launch/train.py."""
+    old = TelemetryStore(window_s=15.0)
+    gov = PowerGovernor(GovernorConfig(slowdown_budget=0.1))
+    for step, prof in enumerate(PROFILE_GRID):
+        d = gov.choose(prof)
+        old.record(StepSample(
+            step=step, t=step * d.time_s, duration_s=d.time_s,
+            power_w=d.power_w, energy_j=d.energy_j, mode=d.mode.idx,
+            freq_mhz=d.freq_mhz))
+
+    sess = EnergySession(policy="energy-aware", slowdown_budget=0.1,
+                         window_s=15.0)
+    for step, prof in enumerate(PROFILE_GRID):
+        sess.observe(step, prof)
+    assert sess.telemetry.to_json() == old.to_json()
+
+
+def test_session_matches_old_baseline_record_path():
+    """...and to the old non-governor branch (nominal frequency, 1700 MHz)."""
+    old = TelemetryStore(window_s=15.0)
+    for step, prof in enumerate(PROFILE_GRID):
+        p = CHIP.power_w(prof, 1.0)
+        old.record(StepSample(
+            step=step, t=step * prof.total_s, duration_s=prof.total_s,
+            power_w=p, energy_j=p * prof.total_s,
+            mode=CHIP.classify_mode(prof).idx, freq_mhz=1700))
+
+    sess = EnergySession(policy="nominal", window_s=15.0)
+    for step, prof in enumerate(PROFILE_GRID):
+        sess.observe(step, prof)
+    assert sess.telemetry.to_json() == old.to_json()
+
+
+def test_session_actuation_and_summary():
+    with EnergySession(policy="energy-aware") as sess:
+        sess.observe(0, StepProfile(0.1, 1.0), wall_s=0.5)   # memory-bound
+        sess.observe(1, StepProfile(1.0, 0.1), wall_s=0.5)   # compute-bound
+    assert sess.actuator.history[0] < sess.actuator.history[1]
+    s = sess.summary()
+    assert s["policy"] == "energy-aware" and s["steps"] == 2
+    assert s["wall_s"] == pytest.approx(1.0)
+    assert s["savings_pct"] > 0.0
+    assert s["energy_j"] == pytest.approx(sess.total_energy_j())
+
+
+def test_session_energy_ordering_across_policies():
+    """Energy-aware (dT=0) never spends more than nominal on the same steps
+    — but unlike a static schedule it also never pays runtime for it."""
+    totals, times = {}, {}
+    for name, knobs in [("nominal", {}),
+                        ("static", dict(freq_mhz=900)),
+                        ("energy-aware", {})]:
+        sess = EnergySession(policy=name, **knobs)
+        for step, prof in enumerate(PROFILE_GRID):
+            sess.observe(step, prof)
+        totals[name] = sess.total_energy_j()
+        times[name] = sum(d.time_s for d in sess.decisions)
+    assert totals["energy-aware"] <= totals["nominal"] + 1e-9
+    assert totals["static"] <= totals["nominal"] + 1e-9
+    # dT=0 invariant: zero slowdown; the static schedule pays runtime instead
+    assert times["energy-aware"] == pytest.approx(times["nominal"])
+    assert times["static"] > times["nominal"]
+
+
+# --------------------------------------------------------- fleet pipeline
+def test_fleet_analysis_matches_hand_wired_pipeline():
+    powers = synth_fleet_powers(100_000, seed=4)
+    expect = project_from_decomposition(decompose(powers, 15.0),
+                                        [900, 700], "freq")
+    rows = FleetAnalysis.from_powers(powers).decompose().project([900, 700])
+    assert [r.to_dict() for r in rows] == [r.to_dict() for r in expect]
+
+
+def test_session_fleet_uses_session_chip():
+    """sess.fleet() classifies telemetry against the session's own chip
+    envelope; the raw from_store default (MI250X bands) would file TPU-v5e
+    decode power into mode 1 and project zero savings."""
+    sess = EnergySession(policy="energy-aware", chip=TPU_V5E)
+    for step in range(50):
+        sess.observe(step, StepProfile(compute_s=0.2, memory_s=1.0))
+    fleet = sess.fleet()
+    assert fleet.chip is TPU_V5E
+    d = fleet.decompose().decomposition
+    assert d.hours_pct[2] == pytest.approx(100.0)    # memory-intensive
+    assert fleet.project([900])[0].savings_pct > 0
+    # the MI250X default envelope would misfile this as mode 1 (idle band)
+    wrong = FleetAnalysis.from_store(sess.telemetry).decompose()
+    assert wrong.decomposition.hours_pct[1] == pytest.approx(100.0)
+
+
+def test_fleet_analysis_from_store():
+    ts = TelemetryStore(window_s=15.0)
+    for i in range(200):
+        ts.record(StepSample(step=i, t=i * 1.0, duration_s=1.0,
+                             power_w=300.0, energy_j=300.0, mode=2,
+                             freq_mhz=1700))
+    fleet = FleetAnalysis.from_store(ts)
+    assert fleet.sample_interval_s == ts.window_s
+    d = fleet.decompose().decomposition
+    assert d.hours_pct[2] == pytest.approx(100.0)
+    assert d.total_energy_mwh > 0
+
+
+def test_fleet_analysis_end_to_end_vs_paper_validation():
+    """The chained pipeline rides on the same engine that reproduces the
+    paper's Table V to <0.15 pct-points."""
+    errs = validate_against_paper("freq")
+    assert errs["sav"] < 0.15 and errs["sav0"] < 0.15
+    fleet = FleetAnalysis.synthetic(300_000, seed=0).decompose()
+    rows = fleet.project([900], "freq")
+    # paper Table IV fleet at the headline 900 MHz cap: high-single-digit %
+    assert 4.0 < rows[0].savings_pct < 15.0
+    assert len(fleet.peaks()) >= 2
+    s = fleet.summary()
+    assert set(s["hours_pct"]) == {1, 2, 3, 4}
+
+
+def test_fleet_analysis_domain_targeting():
+    fleet = FleetAnalysis.synthetic(100_000, seed=1).decompose()
+    e_ci = fleet.decomposition.energy_mwh[3]
+    e_mi = fleet.decomposition.energy_mwh[2]
+    out = fleet.project_domains({"chm": (e_ci / 2, e_mi / 2)}, [900])
+    # half the fleet's modal energy -> half the fleet-wide projected savings
+    full = fleet.project([900])[0].total_mwh
+    assert out["chm"][0].total_mwh == pytest.approx(full / 2, rel=1e-9)

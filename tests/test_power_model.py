@@ -1,6 +1,6 @@
 """Power model invariants (hypothesis) + calibration endpoints."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st  # hypothesis, or skip-stubs
 
 from repro.core import power_model as pm
 from repro.core.hardware import MI250X_GCD, TPU_V5E

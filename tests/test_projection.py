@@ -1,7 +1,7 @@
 """Projection engine vs the paper's published Table V + properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st  # hypothesis, or skip-stubs
 
 from repro.core import hardware as hw
 from repro.core.projection import (ProjectionRow, project,

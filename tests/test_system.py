@@ -16,6 +16,9 @@ from repro.data import make_batch
 from repro.launch.train import StragglerWatchdog, TrainConfig, Trainer
 from repro.models.transformer import Runtime
 
+# long-running model/serving tests: fast lane skips these
+pytestmark = pytest.mark.slow
+
 
 # ------------------------------------------------------------------ training
 def test_governor_reduces_energy_vs_baseline(tmp_path):
