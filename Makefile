@@ -1,7 +1,8 @@
 PYTHON ?= python
-export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+# src for the package, . so `benchmarks` imports as a package everywhere
+export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-power bench examples
+.PHONY: test test-fast test-power bench bench-fast examples
 
 # Full suite — the tier-1 verification lane.
 test:
@@ -17,8 +18,15 @@ test-power:
 		tests/test_modal_governor.py tests/test_projection.py
 
 bench:
-	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py --quiet
+	$(PYTHON) benchmarks/run.py --quiet
+
+# CI bench lane: fast suites only, machine-readable output, regression gate
+# against the committed baselines.
+bench-fast:
+	$(PYTHON) benchmarks/run.py --quiet --fast --json bench_out.json
+	$(PYTHON) benchmarks/check_regression.py bench_out.json benchmarks/baselines.json
 
 examples:
 	$(PYTHON) examples/fleet_projection.py
 	$(PYTHON) examples/energy_aware_training.py
+	$(PYTHON) examples/fleet_jobs_case_study.py

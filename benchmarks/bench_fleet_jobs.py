@@ -1,0 +1,55 @@
+"""Job-level fleet analysis throughput: the vectorized (jobs, samples)
+decomposition + projection against the equivalent per-job Python loop, at
+5k synthetic jobs. The batched path must win by >=10x — this is the perf
+contract behind FleetAnalysis.from_jobs and is gated in CI."""
+import time
+from typing import List, Tuple
+
+from repro.core.modal import decompose, decompose_batch
+from repro.core.projection import project_from_decomposition
+from repro.power import JobTable
+from repro.power.jobs import project_jobs
+
+N_JOBS = 5000
+CAPS = [1500, 1300, 1100, 900, 700]
+
+
+def run(verbose: bool = False) -> List[Tuple[str, float, str]]:
+    table = JobTable.synthetic(N_JOBS, seed=0)
+
+    t_batch = float("inf")
+    for _ in range(3):                           # best-of-3: stable CI gate
+        t0 = time.perf_counter()
+        bd = decompose_batch(table.powers, table.sample_interval_s,
+                             table.chip, mask=table.mask)
+        proj = project_jobs(bd, CAPS)
+        t_batch = min(t_batch, time.perf_counter() - t0)
+
+    t0 = time.perf_counter()
+    loop_rows = []
+    for t in table.traces:                       # the path we replaced
+        d = decompose(t.powers, table.sample_interval_s, table.chip)
+        loop_rows.append(project_from_decomposition(d, CAPS))
+    t_loop = time.perf_counter() - t0
+
+    # same numbers, different engine shape (padding changes summation
+    # order, so compare to float tolerance rather than bit-exact)
+    j_last = len(table) - 1
+    a, b = loop_rows[j_last][3].total_mwh, float(proj.total_mwh[j_last, 3])
+    assert abs(a - b) <= 1e-9 * max(1.0, abs(b)), "batched != per-job loop"
+    speedup = t_loop / max(t_batch, 1e-12)
+    if verbose:
+        print(f"\n# job-level fleet analysis, {N_JOBS} jobs x "
+              f"{table.powers.shape[1]} samples (padded)")
+        print(f"batched: {t_batch * 1e3:.1f} ms   per-job loop: "
+              f"{t_loop * 1e3:.1f} ms   speedup: {speedup:.1f}x")
+    return [
+        ("fleet_jobs_batched_5k", t_batch * 1e6,
+         f"speedup_vs_loop={speedup:.1f}x;n_jobs={N_JOBS}"),
+        ("fleet_jobs_loop_5k", t_loop * 1e6, f"n_jobs={N_JOBS}"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run(verbose=True):
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,73 @@
+"""CI benchmark-regression gate: compare a ``run.py --json`` output file
+against the committed baselines and fail (exit 1) when any tracked
+benchmark's wall time regresses beyond the allowed factor.
+
+    python benchmarks/check_regression.py bench_out.json benchmarks/baselines.json
+
+Policy:
+* only benchmarks named in the baselines file are tracked — timing-noise
+  rows (sub-millisecond validation cells) stay untracked;
+* a tracked benchmark missing from the run output fails (it silently
+  disappeared from the harness);
+* regression means ``wall_s > factor * baseline_wall_s + slack`` with
+  factor 2.0 and 50 ms absolute slack, generous enough for shared CI
+  runners while still catching order-of-magnitude losses (e.g. the
+  vectorized fleet-jobs path falling back to a per-job loop);
+* baselines may pin ``min_derived`` checks, e.g. the fleet-jobs speedup
+  contract (``speedup_vs_loop`` >= 10).
+"""
+import json
+import re
+import sys
+
+FACTOR = 2.0
+SLACK_S = 0.05
+
+
+def _derived_value(derived: str, key: str) -> float:
+    m = re.search(rf"{re.escape(key)}=([-+0-9.eE]+)", derived)
+    if not m:
+        raise SystemExit(f"derived field {key!r} not found in {derived!r}")
+    return float(m.group(1))
+
+
+def main(out_path: str, base_path: str) -> int:
+    with open(out_path) as f:
+        out = {b["name"]: b for b in json.load(f)["benchmarks"]}
+    with open(base_path) as f:
+        baselines = json.load(f)["baselines"]
+
+    failures = []
+    print(f"{'benchmark':32s} {'base_s':>9s} {'now_s':>9s} {'ratio':>6s}")
+    for name, base in baselines.items():
+        got = out.get(name)
+        if got is None:
+            failures.append(f"{name}: missing from benchmark output")
+            continue
+        base_s, now_s = base["wall_s"], got["wall_s"]
+        ratio = now_s / base_s if base_s > 0 else float("inf")
+        status = ""
+        if now_s > FACTOR * base_s + SLACK_S:
+            status = "  REGRESSED"
+            failures.append(f"{name}: {now_s:.3f}s vs baseline "
+                            f"{base_s:.3f}s (>{FACTOR}x + {SLACK_S}s)")
+        print(f"{name:32s} {base_s:9.4f} {now_s:9.4f} {ratio:6.2f}{status}")
+        for key, floor in base.get("min_derived", {}).items():
+            val = _derived_value(got.get("derived", ""), key)
+            if val < floor:
+                failures.append(f"{name}: {key}={val} below floor {floor}")
+            else:
+                print(f"{'':32s} {key}={val} (floor {floor})")
+    if failures:
+        print("\nbenchmark regressions:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  - {f_}", file=sys.stderr)
+        return 1
+    print("\nall tracked benchmarks within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        raise SystemExit(__doc__)
+    sys.exit(main(sys.argv[1], sys.argv[2]))

@@ -1,29 +1,57 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV (plus verbose tables when run directly).
+# CSV (plus verbose tables when run directly). ``--json PATH`` additionally
+# writes machine-readable results (name, wall_s, throughput) for the CI
+# bench lane; ``--fast`` skips the slow framework canaries.
+import json
 import sys
 
 
-def main() -> None:
-    verbose = "--quiet" not in sys.argv
-    from benchmarks import (bench_membw, bench_modal, bench_projection,
-                            bench_roofline_table, bench_train_step,
-                            bench_vai)
+def main(argv=None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    verbose = "--quiet" not in argv
+    fast = "--fast" in argv
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            raise SystemExit("--json needs a PATH argument")
+        json_path = argv[i + 1]
+    from benchmarks import (bench_fleet_jobs, bench_membw, bench_modal,
+                            bench_projection, bench_roofline_table,
+                            bench_train_step, bench_vai)
     suites = [
         ("vai", bench_vai),                  # Figs. 4/5, Table III
         ("membw", bench_membw),              # Fig. 6
         ("modal", bench_modal),              # Fig. 8, Table IV
         ("projection", bench_projection),    # Tables V & VI
+        ("fleet_jobs", bench_fleet_jobs),    # §V job-level, batched vs loop
         ("roofline", bench_roofline_table),  # §Roofline source
-        ("train_step", bench_train_step),    # framework canary
+        ("train_step", bench_train_step),    # framework canary (slow)
     ]
+    slow = {"train_step"}
+    results = []
     print("name,us_per_call,derived")
     for name, mod in suites:
+        if fast and name in slow:
+            continue
         try:
             for row in mod.run(verbose=verbose):
                 print(",".join(str(x) for x in row))
+                results.append(row)
         except Exception as e:  # keep the harness running
             print(f"{name}_FAILED,0,{type(e).__name__}:{e}")
             raise
+    if json_path:
+        payload = [
+            {"name": n, "wall_s": us / 1e6,
+             "throughput": (1e6 / us if us > 0 else None),
+             "derived": derived}
+            for n, us, derived in results]
+        with open(json_path, "w") as f:
+            json.dump({"schema": 1, "fast": fast, "benchmarks": payload}, f,
+                      indent=1)
+        print(f"# wrote {len(payload)} results to {json_path}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

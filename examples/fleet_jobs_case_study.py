@@ -1,0 +1,60 @@
+"""The paper's §V claims at job granularity: a synthetic multi-job fleet
+(job mixes sampled from the model-config registry, traces rendered through
+the MI250X chip model), decomposed and projected per job by the vectorized
+core, then capped per job class — C.I. jobs at the savings-maximizing cap
+(~8.5%, the paper's resource-constrained headline), M.I. jobs at the deepest
+dT=0 cap, latency-bound jobs left alone.
+
+    PYTHONPATH=src python examples/fleet_jobs_case_study.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.power import FleetAnalysis, JOB_CLASSES
+
+
+def main() -> None:
+    print("=== 1. synthetic multi-job fleet (configs -> ChipModel traces) ===")
+    fleet = FleetAnalysis.synthetic_jobs(4000, seed=0)
+    s = fleet.summary()
+    print(f"{s['n_jobs']} jobs / {s['samples']} samples "
+          f"({s['total_energy_mwh']:.2f} MWh) on {s['chip']}")
+    print("job classes:", dict(s["job_classes"]))
+
+    print("\n=== 2. vectorized per-job decomposition + projection ===")
+    bd = fleet.per_job()
+    proj = fleet.project_jobs([1500, 1300, 1100, 900, 700])
+    best = proj.best_cap()
+    cls = fleet.job_classes()
+    for i, name in enumerate(JOB_CLASSES):
+        sel = cls == i
+        sav = proj.savings_pct[sel].max(axis=1)
+        print(f"{name:18s}: median per-job best-cap savings "
+              f"{np.median(sav):5.2f}%  (modal cap: "
+              f"{np.bincount(best[sel].astype(int)).argmax()} MHz)")
+
+    print("\n=== 3. per-class cap schedule (paper §V-C semantics) ===")
+    rep = fleet.job_report()
+    print(rep)
+    ci = rep.by_class()["compute-intensive"]
+    print(f"\nheadline: C.I. (resource-constrained) jobs reach "
+          f"{ci.best_cap_savings_pct:.1f}% at their best cap "
+          f"(paper: ~8.5%); M.I. jobs save "
+          f"{rep.by_class()['memory-intensive'].savings_pct:.1f}% at dT=0")
+
+    print("\n=== 4. consistency with the flat fleet pipeline ===")
+    flat = fleet.project([900])[0]
+    agg = float(fleet.project_jobs([900]).total_mwh.sum())
+    print(f"savings @900 MHz — flat array: {flat.total_mwh:.4f} MWh, "
+          f"sum of per-job: {agg:.4f} MWh "
+          f"(delta {100 * abs(agg - flat.total_mwh) / flat.total_mwh:.3f}%)")
+    print(f"per-job modal energy sums to the fleet total exactly: "
+          f"{float(bd.total_energy_mwh.sum()):.6f} vs "
+          f"{fleet.decomposition.total_energy_mwh:.6f} MWh")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,10 +6,15 @@ objects bind together.
 hardware     — chip specs + the paper's measured MI250X response tables
 power_model  — ChipModel transfer surface (time/power/energy under DVFS and
                caps) + deprecated chip-threaded free-function shims
-modal        — fleet power-histogram modal decomposition (Table IV); driven
-               via repro.power.FleetAnalysis
+modal        — fleet power-histogram modal decomposition (Table IV); the
+               batched (jobs, samples) core is decompose_batch, the flat
+               path its single-row special case; driven via
+               repro.power.FleetAnalysis
 projection   — energy-savings projection engine (Tables V/VI, decoded
-               exact); driven via repro.power.FleetAnalysis.project
+               exact); project_batch vectorizes it over per-job energies
+               with per-job dT weights; driven via
+               repro.power.FleetAnalysis.project / .project_jobs
+               (repro.power.jobs supplies the job traces + class schedule)
 governor     — sweep_decision + legacy PowerGovernor (new code uses
                repro.power.EnergyAwarePolicy inside an EnergySession)
 telemetry    — out-of-band-style power telemetry store + scheduler job log

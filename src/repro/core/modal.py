@@ -54,21 +54,96 @@ class ModalDecomposition:
         return {k: 100.0 * v / t for k, v in self.energy_mwh.items()}
 
 
+@dataclass
+class BatchModalDecomposition:
+    """Per-job modal decomposition of a ``(jobs, samples)`` power matrix.
+
+    Column ``i`` of every array is mode ``MODES[i]`` (idx ``i + 1``); the
+    arrays are one vectorized pass over the whole matrix, never a Python
+    loop per job. :meth:`job` lifts one row back into the dict-keyed
+    :class:`ModalDecomposition` the scalar pipeline speaks.
+    """
+    hours_pct: np.ndarray                # (jobs, n_modes) % of job samples
+    energy_mwh: np.ndarray               # (jobs, n_modes) MWh
+    total_energy_mwh: np.ndarray         # (jobs,)
+    sample_interval_s: float
+    n_samples: np.ndarray                # (jobs,) valid samples per job
+
+    @property
+    def n_jobs(self) -> int:
+        return int(self.total_energy_mwh.shape[0])
+
+    def energy_pct(self) -> np.ndarray:
+        t = np.maximum(self.total_energy_mwh, 1e-12)
+        return 100.0 * self.energy_mwh / t[:, None]
+
+    def dominant_mode(self) -> np.ndarray:
+        """Mode idx (1..4) holding the most energy of each job."""
+        return np.argmax(self.energy_mwh, axis=1).astype(np.int32) + 1
+
+    def hours_frac(self, mode_idx: int) -> np.ndarray:
+        """Per-job fraction of samples spent in ``mode_idx`` (0..1)."""
+        return self.hours_pct[:, mode_idx - 1] / 100.0
+
+    def job(self, j: int) -> ModalDecomposition:
+        return ModalDecomposition(
+            hours_pct={m.idx: float(self.hours_pct[j, i])
+                       for i, m in enumerate(MODES)},
+            energy_mwh={m.idx: float(self.energy_mwh[j, i])
+                        for i, m in enumerate(MODES)},
+            total_energy_mwh=float(self.total_energy_mwh[j]),
+            sample_interval_s=self.sample_interval_s)
+
+    def aggregate(self) -> ModalDecomposition:
+        """Sum over jobs; hours_pct is weighted by per-job valid-sample
+        counts, so it equals decomposing the concatenated samples."""
+        e = self.energy_mwh.sum(axis=0)
+        tot = float(self.total_energy_mwh.sum())
+        n = np.maximum(self.n_samples, 0).astype(np.float64)
+        total_n = max(float(n.sum()), 1.0)
+        hours = (self.hours_pct * n[:, None]).sum(axis=0) / total_n
+        return ModalDecomposition(
+            hours_pct={m.idx: float(hours[i]) for i, m in enumerate(MODES)},
+            energy_mwh={m.idx: float(e[i]) for i, m in enumerate(MODES)},
+            total_energy_mwh=tot, sample_interval_s=self.sample_interval_s)
+
+
+def decompose_batch(power_w: np.ndarray, sample_interval_s: float = 15.0,
+                    chip: ChipSpec = MI250X_GCD,
+                    mask: Optional[np.ndarray] = None
+                    ) -> BatchModalDecomposition:
+    """Vectorized modal decomposition over a ``(jobs, samples)`` matrix.
+
+    ``mask`` (same shape, bool) marks the valid samples of each row —
+    variable-length job traces are right-padded and the padding masked out.
+    One classification pass plus one masked reduction per mode; no Python
+    loop over jobs.
+    """
+    p = np.atleast_2d(np.asarray(power_w, dtype=np.float64))
+    modes = classify_power(p, chip)
+    valid = np.ones(p.shape, dtype=bool) if mask is None \
+        else np.asarray(mask, dtype=bool)
+    n_valid = valid.sum(axis=1)
+    n = np.maximum(n_valid, 1)
+    to_mwh = sample_interval_s / 3600.0 / 1e6        # W*s -> MWh
+    hours = np.empty((p.shape[0], len(MODES)), dtype=np.float64)
+    energy = np.empty_like(hours)
+    for i, m in enumerate(MODES):
+        sel = (modes == m.idx) & valid
+        hours[:, i] = 100.0 * sel.sum(axis=1) / n
+        energy[:, i] = (p * sel).sum(axis=1) * to_mwh
+    total = (p * valid).sum(axis=1) * to_mwh
+    return BatchModalDecomposition(hours, energy, total, sample_interval_s,
+                                   n_samples=n_valid)
+
+
 def decompose(power_w: np.ndarray, sample_interval_s: float = 15.0,
               chip: ChipSpec = MI250X_GCD) -> ModalDecomposition:
     """power_w: flat array of per-GPU power samples (the paper's 15 s
-    out-of-band channel)."""
-    modes = classify_power(power_w, chip)
-    n = max(power_w.size, 1)
-    hours = {}
-    energy = {}
-    for m in MODES:
-        sel = modes == m.idx
-        hours[m.idx] = 100.0 * float(np.sum(sel)) / n
-        energy[m.idx] = float(np.sum(power_w[sel])) * sample_interval_s \
-            / 3600.0 / 1e6  # W*s -> MWh
-    total = float(np.sum(power_w)) * sample_interval_s / 3600.0 / 1e6
-    return ModalDecomposition(hours, energy, total, sample_interval_s)
+    out-of-band channel). The single-job special case of
+    :func:`decompose_batch` — one engine for both paths."""
+    flat = np.asarray(power_w, dtype=np.float64).reshape(1, -1)
+    return decompose_batch(flat, sample_interval_s, chip).job(0)
 
 
 def power_histogram(power_w: np.ndarray, bins: int = 120,

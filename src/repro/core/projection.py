@@ -20,12 +20,18 @@ no savings opportunity in mode 1 and has no benchmark coverage above TDP.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Tuple, Union
+
+import numpy as np
 
 from repro.core import hardware as hw
 
 DT_WEIGHT_CI = 0.1355
 RUNTIME_UNAFFECTED_PCT = 100.5
+# The fleet-decoded dT weight corresponds to the fleet's C.I. hours share
+# (Table IV: 19.5%); dividing it out gives the per-unit-of-C.I.-hours weight
+# used to project per-job runtime increase from each job's own mode mix.
+DT_WEIGHT_PER_CI_HOUR = DT_WEIGHT_CI / (hw.MODES[2].gpu_hours_pct / 100.0)
 
 
 @dataclass
@@ -45,33 +51,101 @@ class ProjectionRow:
                     savings_dt0_pct=self.savings_dt0_pct)
 
 
+def interp_response_batch(table: Mapping[int, Tuple[float, float, float]],
+                          caps: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`repro.core.hardware.interp_response`: piecewise-
+    linear (power %, runtime %, energy %) columns at each cap, clamped to
+    the table's endpoints. Returns shape ``(len(caps), 3)``."""
+    keys = np.array(sorted(table), dtype=np.float64)
+    cols = np.array([table[int(k)] for k in keys], dtype=np.float64)
+    caps = np.asarray(caps, dtype=np.float64)
+    return np.stack([np.interp(caps, keys, cols[:, i]) for i in range(3)],
+                    axis=1)
+
+
+@dataclass
+class BatchProjection:
+    """Per-job savings projection: every array is ``(jobs, caps)``, computed
+    as one array program over the whole job population."""
+    caps: np.ndarray                     # (caps,)
+    kind: str
+    ci_mwh: np.ndarray                   # (jobs, caps)
+    mi_mwh: np.ndarray
+    total_mwh: np.ndarray
+    savings_pct: np.ndarray
+    dt_pct: np.ndarray
+    savings_dt0_pct: np.ndarray
+
+    @property
+    def n_jobs(self) -> int:
+        return int(self.ci_mwh.shape[0])
+
+    def rows(self, j: int = 0) -> List[ProjectionRow]:
+        """Row ``j`` as the scalar pipeline's list of ProjectionRows."""
+        return [ProjectionRow(
+            cap=float(self.caps[c]), ci_mwh=float(self.ci_mwh[j, c]),
+            mi_mwh=float(self.mi_mwh[j, c]),
+            total_mwh=float(self.total_mwh[j, c]),
+            savings_pct=float(self.savings_pct[j, c]),
+            dt_pct=float(self.dt_pct[j, c]),
+            savings_dt0_pct=float(self.savings_dt0_pct[j, c]))
+            for c in range(len(self.caps))]
+
+    def best_cap(self, dt0_only: bool = False) -> np.ndarray:
+        """Per-job cap maximizing projected savings; with ``dt0_only`` the
+        argmax runs over the dT=0-eligible savings column instead (the
+        paper's "no performance compromise" criterion)."""
+        score = self.savings_dt0_pct if dt0_only else self.savings_pct
+        return self.caps[np.argmax(score, axis=1)]
+
+
+def project_batch(caps: Union[List[float], np.ndarray], kind: str = "freq",
+                  e_ci_mwh=hw.FLEET_ENERGY_CI_MWH,
+                  e_mi_mwh=hw.FLEET_ENERGY_MI_MWH,
+                  e_total_mwh=hw.TOTAL_FLEET_ENERGY_MWH,
+                  dt_weight: Union[float, np.ndarray] = DT_WEIGHT_CI,
+                  ) -> BatchProjection:
+    """Vectorized projection over per-job modal energies.
+
+    ``e_ci_mwh`` / ``e_mi_mwh`` / ``e_total_mwh`` are ``(jobs,)`` arrays
+    (scalars work too and default to the paper's fleet constants, matching
+    :func:`project`); ``dt_weight`` is the fleet constant or a ``(jobs,)``
+    array of per-job C.I.-hours weights
+    (``DT_WEIGHT_PER_CI_HOUR * hours_frac(3)``).
+    """
+    vai = hw.FREQ_RESPONSE_VAI if kind == "freq" else hw.POWER_RESPONSE_VAI
+    mb = hw.FREQ_RESPONSE_MB if kind == "freq" else hw.POWER_RESPONSE_MB
+    caps = np.asarray(caps, dtype=np.float64)
+    r_ci = interp_response_batch(vai, caps)       # (caps, 3)
+    r_mi = interp_response_batch(mb, caps)
+    e_ci = np.atleast_1d(np.asarray(e_ci_mwh, dtype=np.float64))[:, None]
+    e_mi = np.atleast_1d(np.asarray(e_mi_mwh, dtype=np.float64))[:, None]
+    e_tot = np.atleast_1d(np.asarray(e_total_mwh, dtype=np.float64))[:, None]
+    w_dt = np.atleast_1d(np.asarray(dt_weight, dtype=np.float64))[:, None]
+
+    s_ci = e_ci * (1.0 - r_ci[None, :, 2] / 100.0)          # (jobs, caps)
+    s_mi = e_mi * (1.0 - r_mi[None, :, 2] / 100.0)
+    total = s_ci + s_mi
+    denom = np.maximum(e_tot, 1e-12)
+    dt = np.broadcast_to(w_dt * (r_ci[None, :, 1] - 100.0), total.shape)
+    sav0 = (s_mi * (r_mi[None, :, 1] <= RUNTIME_UNAFFECTED_PCT)
+            + s_ci * (r_ci[None, :, 1] <= RUNTIME_UNAFFECTED_PCT))
+    return BatchProjection(
+        caps=caps, kind=kind, ci_mwh=s_ci, mi_mwh=s_mi, total_mwh=total,
+        savings_pct=100.0 * total / denom, dt_pct=dt,
+        savings_dt0_pct=100.0 * sav0 / denom)
+
+
 def project(caps: List[float], kind: str = "freq",
             e_ci_mwh: float = hw.FLEET_ENERGY_CI_MWH,
             e_mi_mwh: float = hw.FLEET_ENERGY_MI_MWH,
             e_total_mwh: float = hw.TOTAL_FLEET_ENERGY_MWH,
             ) -> List[ProjectionRow]:
-    """Paper-faithful projection from the measured MI250X response tables."""
-    vai = hw.FREQ_RESPONSE_VAI if kind == "freq" else hw.POWER_RESPONSE_VAI
-    mb = hw.FREQ_RESPONSE_MB if kind == "freq" else hw.POWER_RESPONSE_MB
-    rows = []
-    for cap in caps:
-        _, rt_ci, en_ci = hw.interp_response(vai, cap)
-        _, rt_mi, en_mi = hw.interp_response(mb, cap)
-        s_ci = e_ci_mwh * (1.0 - en_ci / 100.0)
-        s_mi = e_mi_mwh * (1.0 - en_mi / 100.0)
-        total = s_ci + s_mi
-        dt = DT_WEIGHT_CI * (rt_ci - 100.0)
-        sav0 = 0.0
-        if rt_mi <= RUNTIME_UNAFFECTED_PCT:
-            sav0 += s_mi
-        if rt_ci <= RUNTIME_UNAFFECTED_PCT:
-            sav0 += s_ci
-        rows.append(ProjectionRow(
-            cap=cap, ci_mwh=s_ci, mi_mwh=s_mi, total_mwh=total,
-            savings_pct=100.0 * total / e_total_mwh,
-            dt_pct=dt,
-            savings_dt0_pct=100.0 * sav0 / e_total_mwh))
-    return rows
+    """Paper-faithful projection from the measured MI250X response tables —
+    the single-job special case of :func:`project_batch`."""
+    return project_batch(caps, kind, e_ci_mwh=np.array([e_ci_mwh]),
+                         e_mi_mwh=np.array([e_mi_mwh]),
+                         e_total_mwh=np.array([e_total_mwh])).rows(0)
 
 
 def project_from_decomposition(decomp, caps: List[float],

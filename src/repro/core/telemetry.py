@@ -75,7 +75,10 @@ class TelemetryStore:
     def record(self, s: StepSample) -> None:
         if self._window_start is None:
             self._window_start = s.t
-        if s.t - self._window_start >= self.window_s and self._pending:
+        # close the window on time, and on job change so every aggregate
+        # carries exactly one job id (the fleet job analysis joins on it)
+        if self._pending and (s.t - self._window_start >= self.window_s
+                              or s.job_id != self._pending[-1].job_id):
             self.flush()
             self._window_start = s.t
         self._pending.append(s)
@@ -100,6 +103,23 @@ class TelemetryStore:
     def powers(self) -> np.ndarray:
         self.flush()
         return np.array([w.mean_power_w for w in self.windows])
+
+    def job_ids(self) -> List[str]:
+        """Distinct job ids, in first-seen order."""
+        self.flush()
+        seen: Dict[str, None] = {}
+        for w in self.windows:
+            seen.setdefault(w.job_id)
+        return list(seen)
+
+    def powers_by_job(self) -> Dict[str, np.ndarray]:
+        """Windowed mean powers per job id, first-seen order — the
+        ingestion feed of :class:`repro.power.jobs.JobTable`."""
+        self.flush()
+        out: Dict[str, List[float]] = {}
+        for w in self.windows:
+            out.setdefault(w.job_id, []).append(w.mean_power_w)
+        return {j: np.array(p) for j, p in out.items()}
 
     def total_energy_j(self) -> float:
         self.flush()

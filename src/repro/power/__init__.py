@@ -13,6 +13,11 @@ session   — :class:`EnergySession`: policy + actuator + telemetry behind a
             single ``observe(step, profile, wall_s)`` call
 fleet     — :class:`FleetAnalysis`: chained telemetry -> modal -> projection
             pipeline (``from_store(ts).decompose().project(caps)``)
+jobs      — job-level fleet: :class:`JobTable` (synthetic multi-job workload
+            sampled from the model configs / job-tagged telemetry ingestion)
+            + per-job class assignment and the per-class cap schedule
+            (``FleetAnalysis.from_jobs(table).job_report()``); analysis runs
+            on the vectorized ``(jobs, samples)`` core in ``repro.core``
 
 Typical driver:
 
@@ -30,8 +35,11 @@ The legacy entry points (`repro.core.power_model` free functions,
 from repro.core.governor import (  # noqa: F401
     Decision, GovernorConfig, PowerActuator, PowerGovernor,
     SimulatedActuator, sweep_decision)
+from repro.core.modal import (  # noqa: F401
+    BatchModalDecomposition, decompose_batch)
 from repro.core.projection import (  # noqa: F401
-    ProjectionRow, domain_targeted_project, project, validate_against_paper)
+    BatchProjection, ProjectionRow, domain_targeted_project, project,
+    project_batch, validate_against_paper)
 from repro.core.telemetry import (  # noqa: F401
     JobLog, JobRecord, StepSample, TelemetryStore)
 from repro.power.chip import (  # noqa: F401
@@ -41,6 +49,9 @@ from repro.power.policies import (  # noqa: F401
     POLICIES, EnergyAwarePolicy, NominalPolicy, PowerCapPolicy, PowerPolicy,
     StaticFrequencyPolicy, get_policy)
 from repro.power.session import EnergySession  # noqa: F401
+from repro.power.jobs import (  # noqa: F401
+    ClassReport, FleetJobsReport, JOB_CLASSES, JobTable, JobTrace,
+    class_cap_report, classify_jobs, synth_job_traces)
 from repro.power.fleet import FleetAnalysis  # noqa: F401
 
 __all__ = [
@@ -58,4 +69,9 @@ __all__ = [
     # fleet pipeline
     "FleetAnalysis", "ProjectionRow", "domain_targeted_project", "project",
     "validate_against_paper",
+    # job-level fleet (vectorized per-job core + class cap schedule)
+    "BatchModalDecomposition", "BatchProjection", "ClassReport",
+    "FleetJobsReport", "JOB_CLASSES", "JobTable", "JobTrace",
+    "class_cap_report", "classify_jobs", "decompose_batch", "project_batch",
+    "synth_job_traces",
 ]

@@ -8,32 +8,45 @@ to wire `repro.core.{telemetry,modal,projection}` together by hand;
 
     rows = FleetAnalysis.from_store(ts).decompose().project([900])
 
-Construct from a live :class:`TelemetryStore`, a raw power-sample array, or
-the paper-calibrated synthetic fleet.
+Construct from a live :class:`TelemetryStore`, a raw power-sample array, the
+paper-calibrated synthetic fleet, or — for the paper's job-granular claims —
+a :class:`repro.power.jobs.JobTable` via :meth:`from_jobs`, which unlocks
+the vectorized per-job surface (``per_job()`` / ``project_jobs()`` /
+``job_report()``). Both paths run on the same batched array core
+(:func:`repro.core.modal.decompose_batch`,
+:func:`repro.core.projection.project_batch`); the flat array here is its
+single-job special case.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Mapping, Optional, Tuple, Union
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.hardware import ChipSpec, MI250X_GCD
-from repro.core.modal import (ModalDecomposition, decompose, detect_peaks,
-                              power_histogram, synth_fleet_powers)
-from repro.core.projection import (ProjectionRow, domain_targeted_project,
+from repro.core.modal import (BatchModalDecomposition, ModalDecomposition,
+                              decompose, detect_peaks, power_histogram,
+                              synth_fleet_powers)
+from repro.core.projection import (BatchProjection, ProjectionRow,
+                                   domain_targeted_project,
                                    project_from_decomposition)
 from repro.core.telemetry import TelemetryStore
+from repro.power import jobs as jobs_mod
 
 
 class FleetAnalysis:
-    """Chained fleet-power analysis over one array of power samples."""
+    """Chained fleet-power analysis over one array of power samples (plus
+    the per-job view when built ``from_jobs``)."""
 
     def __init__(self, powers: np.ndarray, chip: ChipSpec = MI250X_GCD,
-                 sample_interval_s: float = 15.0):
+                 sample_interval_s: float = 15.0,
+                 jobs: Optional["jobs_mod.JobTable"] = None):
         self.powers = np.asarray(powers, dtype=np.float64)
         self.chip = chip
         self.sample_interval_s = sample_interval_s
         self.decomposition: Optional[ModalDecomposition] = None
+        self.jobs = jobs
+        self._job_decomposition: Optional[BatchModalDecomposition] = None
 
     # --------------------------------------------------------- constructors
     @classmethod
@@ -42,15 +55,30 @@ class FleetAnalysis:
                    sample_interval_s: Optional[float] = None
                    ) -> "FleetAnalysis":
         """Analyze the windowed mean powers of a live telemetry store; the
-        sample interval defaults to the store's aggregation window."""
+        sample interval defaults to the store's aggregation window. When the
+        store carries more than one job id the per-job surface comes along
+        for free (``from_jobs(JobTable.from_store(...))`` shorthand)."""
         interval = sample_interval_s if sample_interval_s is not None \
             else store.window_s
-        return cls(store.powers(), chip=chip, sample_interval_s=interval)
+        jt = None
+        if len(store.job_ids()) > 1:
+            jt = jobs_mod.JobTable.from_store(store, chip=chip,
+                                              sample_interval_s=interval)
+        return cls(store.powers(), chip=chip, sample_interval_s=interval,
+                   jobs=jt)
 
     @classmethod
     def from_powers(cls, powers: np.ndarray, chip: ChipSpec = MI250X_GCD,
                     sample_interval_s: float = 15.0) -> "FleetAnalysis":
         return cls(powers, chip=chip, sample_interval_s=sample_interval_s)
+
+    @classmethod
+    def from_jobs(cls, jobs: "jobs_mod.JobTable") -> "FleetAnalysis":
+        """Job-granular fleet: the flat pipeline runs over the concatenated
+        valid samples (so aggregate numbers match the legacy path), and the
+        ``(jobs, samples)`` matrix feeds the vectorized per-job analysis."""
+        return cls(jobs.concat_powers(), chip=jobs.chip,
+                   sample_interval_s=jobs.sample_interval_s, jobs=jobs)
 
     @classmethod
     def synthetic(cls, n_samples: int, seed: int = 0,
@@ -62,6 +90,17 @@ class FleetAnalysis:
         return cls(synth_fleet_powers(n_samples, seed=seed,
                                       hours_pct=hours_pct, chip=chip),
                    chip=chip, sample_interval_s=sample_interval_s)
+
+    @classmethod
+    def synthetic_jobs(cls, n_jobs: int, seed: int = 0,
+                       chip: ChipSpec = MI250X_GCD,
+                       sample_interval_s: float = 15.0,
+                       **kw) -> "FleetAnalysis":
+        """Job-granular synthetic fleet: ``n_jobs`` jobs sampled from the
+        model-config registry and rendered through the chip model."""
+        return cls.from_jobs(jobs_mod.JobTable.synthetic(
+            n_jobs, seed=seed, chip=chip,
+            sample_interval_s=sample_interval_s, **kw))
 
     # ---------------------------------------------------------------- modal
     def decompose(self) -> "FleetAnalysis":
@@ -108,10 +147,42 @@ class FleetAnalysis:
         return domain_targeted_project(domain_energies, caps, kind,
                                        e_total_mwh=e_total)
 
+    # ---------------------------------------------------------- job surface
+    def _require_jobs(self) -> "jobs_mod.JobTable":
+        if self.jobs is None:
+            raise ValueError(
+                "no per-job view: construct via FleetAnalysis.from_jobs / "
+                "synthetic_jobs, or a multi-job telemetry store")
+        return self.jobs
+
+    def per_job(self) -> BatchModalDecomposition:
+        """Batched per-job modal decomposition — one vectorized pass over
+        the whole ``(jobs, samples)`` matrix, cached."""
+        if self._job_decomposition is None:
+            self._job_decomposition = self._require_jobs().decompose()
+        return self._job_decomposition
+
+    def job_classes(self) -> np.ndarray:
+        """Per-job class index into :data:`repro.power.jobs.JOB_CLASSES`."""
+        return jobs_mod.classify_jobs(self.per_job())
+
+    def project_jobs(self, caps: Sequence[float], kind: str = "freq"
+                     ) -> BatchProjection:
+        """Per-job cap projection with per-job dT weights; all arrays are
+        ``(jobs, caps)``."""
+        return jobs_mod.project_jobs(self.per_job(), caps, kind)
+
+    def job_report(self, caps: Optional[Sequence[float]] = None,
+                   kind: str = "freq") -> "jobs_mod.FleetJobsReport":
+        """Per-class cap schedule + aggregate savings (the paper's §V job-
+        granular result: C.I. jobs capped for maximum savings, M.I. jobs
+        capped at dT=0, latency-bound jobs left alone)."""
+        return jobs_mod.class_cap_report(self.per_job(), caps, kind)
+
     # -------------------------------------------------------------- summary
     def summary(self) -> dict:
         d = self._decomposition()
-        return {
+        out = {
             "chip": self.chip.name,
             "samples": int(self.powers.size),
             "hours_pct": d.hours_pct,
@@ -119,3 +190,10 @@ class FleetAnalysis:
             "total_energy_mwh": d.total_energy_mwh,
             "peaks_w": self.peaks(),
         }
+        if self.jobs is not None:
+            cls = self.job_classes()
+            out["n_jobs"] = len(self.jobs)
+            out["job_classes"] = {
+                name: int((cls == i).sum())
+                for i, name in enumerate(jobs_mod.JOB_CLASSES)}
+        return out

@@ -1,0 +1,107 @@
+"""TelemetryStore windowing edge cases (previously only covered indirectly
+through test_power_api) plus the job-tagged window semantics the fleet job
+analysis depends on."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.telemetry import JobRecord, StepSample, TelemetryStore
+
+
+def _sample(step: int, t: float, power: float = 300.0,
+            job_id: str = "job0", duration: float = 1.0) -> StepSample:
+    return StepSample(step=step, t=t, duration_s=duration, power_w=power,
+                      energy_j=power * duration, mode=2, freq_mhz=1700,
+                      job_id=job_id)
+
+
+# ------------------------------------------------------------ empty store
+def test_empty_store():
+    ts = TelemetryStore()
+    ts.flush()                                   # no-op, no error
+    assert ts.powers().size == 0
+    assert ts.total_energy_j() == 0.0
+    assert ts.mode_hours_pct() == {}
+    assert ts.job_ids() == []
+    assert ts.powers_by_job() == {}
+    assert json.loads(ts.to_json()) == []
+
+
+# ----------------------------------------------------------- single sample
+def test_single_sample_single_window():
+    ts = TelemetryStore(window_s=15.0)
+    ts.record(_sample(0, t=3.0, power=250.0, duration=2.0))
+    powers = ts.powers()                         # powers() flushes
+    assert powers == pytest.approx([250.0])
+    w = ts.windows[0]
+    assert (w.t_start, w.t_end, w.samples) == (3.0, 5.0, 1)
+    assert w.mean_power_w == pytest.approx(w.energy_j / 2.0)
+
+
+# ----------------------------------------- boundary exactly on a timestamp
+def test_window_boundary_exactly_on_sample_timestamp():
+    """A sample landing exactly window_s after the window start must open a
+    new window (the >= boundary), never stretch the old one."""
+    ts = TelemetryStore(window_s=15.0)
+    for i, t in enumerate([0.0, 5.0, 10.0, 15.0, 29.9, 30.0]):
+        ts.record(_sample(i, t=t))
+    ts.flush()
+    assert [w.samples for w in ts.windows] == [3, 2, 1]
+    assert [w.t_start for w in ts.windows] == [0.0, 15.0, 30.0]
+    # every sample landed in exactly one window
+    assert sum(w.samples for w in ts.windows) == 6
+
+
+def test_sub_window_samples_aggregate_into_one():
+    ts = TelemetryStore(window_s=15.0)
+    for i in range(14):
+        ts.record(_sample(i, t=float(i)))
+    ts.flush()
+    assert len(ts.windows) == 1
+    assert ts.windows[0].samples == 14
+
+
+# ------------------------------------------------------------- job tagging
+def test_job_change_closes_window():
+    """Windows must never mix job ids, even mid-window."""
+    ts = TelemetryStore(window_s=100.0)
+    ts.record(_sample(0, t=0.0, job_id="a"))
+    ts.record(_sample(1, t=1.0, job_id="a"))
+    ts.record(_sample(2, t=2.0, job_id="b", power=500.0))
+    ts.flush()
+    assert [w.job_id for w in ts.windows] == ["a", "b"]
+    assert ts.windows[0].samples == 2 and ts.windows[1].samples == 1
+    by_job = ts.powers_by_job()
+    assert by_job["a"] == pytest.approx([300.0])
+    assert by_job["b"] == pytest.approx([500.0])
+    assert ts.job_ids() == ["a", "b"]            # first-seen order
+
+
+def test_powers_by_job_concat_equals_powers():
+    ts = TelemetryStore(window_s=15.0)
+    t = 0.0
+    for jid in ("a", "b", "a"):
+        for i in range(40):
+            ts.record(_sample(i, t=t, job_id=jid))
+            t += 1.0
+    all_powers = ts.powers()
+    by_job = ts.powers_by_job()
+    assert sum(p.size for p in by_job.values()) == all_powers.size
+    assert np.concatenate([by_job["a"], by_job["b"]]).size == all_powers.size
+
+
+def test_json_roundtrip_preserves_job_ids():
+    ts = TelemetryStore(window_s=10.0)
+    ts.record(_sample(0, t=0.0, job_id="x"))
+    ts.record(_sample(1, t=0.5, job_id="y"))
+    back = TelemetryStore.from_json(ts.to_json(), window_s=10.0)
+    assert back.job_ids() == ["x", "y"]
+
+
+# ------------------------------------------------------------- job records
+def test_job_record_size_class_bounds():
+    assert JobRecord("j", "chm_x", 1, 0.0).size_class() == "E"
+    assert JobRecord("j", "chm_x", 92, 0.0).size_class() == "D"
+    assert JobRecord("j", "chm_x", 9408, 0.0).size_class() == "A"
+    assert JobRecord("j", "chm_x", 10_000, 0.0).size_class() == "E"
