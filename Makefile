@@ -15,7 +15,7 @@ test-fast:
 # Just the power-management surface (the repro.power API + its engines).
 test-power:
 	$(PYTHON) -m pytest -x -q tests/test_power_api.py tests/test_power_model.py \
-		tests/test_modal_governor.py tests/test_projection.py
+		tests/test_surface.py tests/test_modal_governor.py tests/test_projection.py
 
 bench:
 	$(PYTHON) benchmarks/run.py --quiet
@@ -30,3 +30,4 @@ examples:
 	$(PYTHON) examples/fleet_projection.py
 	$(PYTHON) examples/energy_aware_training.py
 	$(PYTHON) examples/fleet_jobs_case_study.py
+	$(PYTHON) examples/cross_chip_projection.py

@@ -1,0 +1,63 @@
+"""Cross-chip what-if projection (the question the paper stops short of).
+
+The paper's fleet projection is hard-wired to the measured MI250X Table III
+response columns. But the chip model can *synthesize* those columns for any
+registered chip from its calibrated transfer surface
+(`repro.power.response_table`), so we can ask: if the same Frontier-shaped
+workload ran on a TPU v5e fleet, what would frequency capping buy?
+
+Pipeline (all on the batched engines):
+
+1. model-derive Table III for TPU v5e — one ``(profiles, caps)``
+   TransferSurface pass per benchmark family;
+2. decompose the synthetic Frontier-calibrated fleet telemetry into modes;
+3. project the same modal energy split through either response surface:
+   the measured MI250X tables vs the model-derived TPU v5e tables;
+4. repeat at job granularity: the per-class cap schedule
+   (``job_report(tables=...)``) under the TPU response surface.
+
+    PYTHONPATH=src python examples/cross_chip_projection.py
+"""
+from repro.power import (FleetAnalysis, MI250X_GCD, TPU_V5E, builtin_tables,
+                         response_table)
+
+
+def main() -> None:
+    # 1. model-derived Table III analogue for the TPU v5e
+    tpu_tables = response_table("tpu-v5e", kind="freq")
+    print("# model-derived response table, tpu-v5e (freq caps)")
+    print("cap_mhz  family   power%  runtime%  energy%")
+    for fam, col in (("vai", tpu_tables.vai), ("mb", tpu_tables.mb)):
+        for cap in sorted(col, reverse=True):
+            p, r, e = col[cap]
+            print(f"{cap:7d}  {fam:6s}  {p:6.1f}  {r:8.1f}  {e:7.1f}")
+
+    # 2. the Frontier-shaped fleet (Table IV calibrated synthetic telemetry)
+    fleet = FleetAnalysis.synthetic(300_000, seed=0).decompose()
+    caps = sorted((k for k in tpu_tables.vai if k < max(tpu_tables.vai)),
+                  reverse=True)
+
+    # 3. same workload, two chips' response surfaces
+    print("\n# fleet savings projection: measured MI250X vs model tpu-v5e")
+    print(f"{'cap_mhz':>7s}  {'mi250x sav%':>11s} {'dT%':>5s}   "
+          f"{'tpu-v5e sav%':>12s} {'dT%':>5s}")
+    rows_mi = fleet.project(caps, "freq", tables=builtin_tables("freq"))
+    rows_tpu = fleet.project(caps, "freq", tables=tpu_tables)
+    for rm, rt in zip(rows_mi, rows_tpu):
+        print(f"{int(rm.cap):7d}  {rm.savings_pct:11.2f} {rm.dt_pct:5.2f}   "
+              f"{rt.savings_pct:12.2f} {rt.dt_pct:5.2f}")
+    best = max(rows_tpu, key=lambda r: r.savings_pct)
+    print(f"best tpu-v5e cap: {int(best.cap)} MHz -> "
+          f"{best.savings_pct:.2f}% ({best.total_mwh:.3f} MWh of this "
+          f"synthetic fleet), dT {best.dt_pct:.2f}%")
+
+    # 4. job-granular: the per-class cap schedule under the TPU surface
+    jobs = FleetAnalysis.synthetic_jobs(2000, seed=0)
+    print("\n# per-class cap schedule, tpu-v5e response surface")
+    print(jobs.job_report(tables=tpu_tables))
+    print("\n# per-class cap schedule, measured MI250X (paper)")
+    print(jobs.job_report())
+
+
+if __name__ == "__main__":
+    main()

@@ -4,15 +4,19 @@ and new code should import from there; this package holds the engines those
 objects bind together.
 
 hardware     — chip specs + the paper's measured MI250X response tables
-power_model  — ChipModel transfer surface (time/power/energy under DVFS and
-               caps) + deprecated chip-threaded free-function shims
+power_model  — ChipModel: chip-bound scalar views of the array-native
+               transfer surface in repro.power.surface (time/power/energy
+               under DVFS and caps) + deprecated chip-threaded shims
 modal        — fleet power-histogram modal decomposition (Table IV); the
                batched (jobs, samples) core is decompose_batch, the flat
                path its single-row special case; driven via
                repro.power.FleetAnalysis
 projection   — energy-savings projection engine (Tables V/VI, decoded
                exact); project_batch vectorizes it over per-job energies
-               with per-job dT weights; driven via
+               with per-job dT weights and takes ResponseTables
+               (builtin_tables = measured MI250X Table III,
+               repro.power.surface.response_table = model-derived for any
+               chip — the cross-chip what-if path); driven via
                repro.power.FleetAnalysis.project / .project_jobs
                (repro.power.jobs supplies the job traces + class schedule)
 governor     — sweep_decision + legacy PowerGovernor (new code uses

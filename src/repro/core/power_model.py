@@ -62,7 +62,7 @@ class ChipModel:
     three interchangeably.
     """
 
-    __slots__ = ("spec",)
+    __slots__ = ("spec", "_surfaces")
 
     def __init__(self, chip: Union[ChipSpec, str, "ChipModel"] = TPU_V5E):
         if isinstance(chip, ChipModel):
@@ -74,6 +74,7 @@ class ChipModel:
                 raise KeyError(
                     f"unknown chip {chip!r}; known: {sorted(CHIPS)}") from None
         self.spec: ChipSpec = chip
+        self._surfaces: dict = {}
 
     def __repr__(self) -> str:
         return f"ChipModel({self.spec.name!r})"
@@ -108,40 +109,39 @@ class ChipModel:
         return [lo + (1.0 - lo) * i / (n - 1) for i in range(n)]
 
     # ----------------------------------------------------- transfer surface
+    # The elementwise formulas live in repro.power.surface.TransferSurface;
+    # every scalar method below is the single-element view of that batched
+    # engine (one implementation, bit-for-bit across both call shapes).
+    def surface(self, backend: str = "numpy"):
+        """This chip's array-native :class:`~repro.power.surface.
+        TransferSurface`, cached per backend."""
+        surf = self._surfaces.get(backend)
+        if surf is None:
+            from repro.power.surface import TransferSurface
+            surf = self._surfaces[backend] = TransferSurface(
+                self, backend=backend)
+        return surf
+
     def step_time(self, profile: StepProfile, freq_frac: float = 1.0
                   ) -> float:
-        return max(profile.compute_s / max(freq_frac, 1e-6),
-                   profile.memory_s, profile.collective_s, 1e-12)
+        return float(self.surface().step_time(profile, freq_frac))
 
     def utilizations(self, profile: StepProfile, freq_frac: float = 1.0
                      ) -> Tuple[float, float, float]:
-        t = self.step_time(profile, freq_frac)
-        return (profile.compute_s / max(freq_frac, 1e-6) / t,
-                profile.memory_s / t,
-                profile.collective_s / t)
+        u_c, u_m, u_n = self.surface().utilizations(profile, freq_frac)
+        return (float(u_c), float(u_m), float(u_n))
 
     def power_w(self, profile: StepProfile, freq_frac: float = 1.0) -> float:
-        u_c, u_m, u_n = self.utilizations(profile, freq_frac)
-        spec = self.spec
-        span = spec.tdp_w - spec.idle_w
-        p = spec.idle_w + span * (W_COMPUTE * u_c * freq_frac ** GAMMA
-                                  + W_MEMORY * u_m + W_NETWORK * u_n)
-        return min(p, spec.tdp_w)
+        return float(self.surface().power_w(profile, freq_frac))
 
     def energy_j(self, profile: StepProfile, freq_frac: float = 1.0) -> float:
-        return self.power_w(profile, freq_frac) \
-            * self.step_time(profile, freq_frac)
+        return float(self.surface().energy_j(profile, freq_frac))
 
     def freq_for_power_cap(self, profile: StepProfile, cap_w: float,
                            grid: int = 64) -> float:
-        """RAPL-style enforcement: highest frequency with power <= cap."""
-        lo = self.f_min_frac
-        best = lo
-        for i in range(grid + 1):
-            f = lo + (1.0 - lo) * i / grid
-            if self.power_w(profile, f) <= cap_w:
-                best = max(best, f)
-        return best
+        """RAPL-style enforcement: highest frequency with power <= cap —
+        one argmax over the whole grid, not ``grid + 1`` scalar calls."""
+        return float(self.surface().freq_for_power_cap(profile, cap_w, grid))
 
     # -------------------------------------------------- mode classification
     def classify_mode(self, profile: StepProfile,
@@ -150,12 +150,8 @@ class ChipModel:
         paper must *infer* the mode from power alone (power-only telemetry);
         sitting above the compiler we know the roofline terms exactly — the
         inverse inference is :meth:`classify_mode_from_power`."""
-        u_c, u_m, u_n = self.utilizations(profile, freq_frac)
-        if u_n >= max(u_c, u_m):
-            return MODES[0]                   # network/latency bound
-        if u_m >= u_c:
-            return MODES[1]                   # memory intensive
-        return MODES[2]                       # compute intensive
+        idx = int(self.surface().classify_mode_idx(profile, freq_frac))
+        return MODES[idx - 1]
 
     def classify_mode_from_power(self, p_w: float) -> Mode:
         """Paper-faithful power-band inference, MI250X bands rescaled to the
@@ -174,9 +170,14 @@ class ChipModel:
         return MODES[3]
 
     # ----------------------------------------------------- profile builders
-    def vai_profile(self, ai: float, n_elems: int, loopsize: int,
+    def vai_profile(self, n_elems: int, loopsize: int,
                     itemsize: int = 4) -> StepProfile:
-        """Roofline position of one VAI pass (paper Algorithm 1)."""
+        """Roofline position of one VAI pass (paper Algorithm 1).
+
+        ``loopsize`` fully determines the arithmetic intensity
+        (``AI = 2 * loopsize / (accesses * itemsize)``), so the redundant
+        ``ai`` argument the deprecated free-function shim still accepts is
+        gone from the bound method."""
         flops = 2.0 * loopsize * n_elems
         byts = (4 if loopsize else 2) * n_elems * itemsize
         # VAI is a VPU (vector) workload, not MXU: peak vector flops ~ peak/8
@@ -244,5 +245,7 @@ def classify_mode_from_power(p_w: float, chip: ChipSpec = TPU_V5E) -> Mode:
 
 def vai_profile(ai: float, n_elems: int, loopsize: int,
                 chip: ChipSpec = TPU_V5E, itemsize: int = 4) -> StepProfile:
+    # keeps the historical (ai, ...) signature; ai was never used — the
+    # loopsize determines the intensity (see ChipModel.vai_profile)
     _deprecated("vai_profile")
-    return ChipModel(chip).vai_profile(ai, n_elems, loopsize, itemsize)
+    return ChipModel(chip).vai_profile(n_elems, loopsize, itemsize)

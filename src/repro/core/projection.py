@@ -33,6 +33,37 @@ RUNTIME_UNAFFECTED_PCT = 100.5
 # used to project per-job runtime increase from each job's own mode mix.
 DT_WEIGHT_PER_CI_HOUR = DT_WEIGHT_CI / (hw.MODES[2].gpu_hours_pct / 100.0)
 
+ResponseColumn = Mapping[int, Tuple[float, float, float]]
+
+
+@dataclass(frozen=True)
+class ResponseTables:
+    """A pair of Table III-style response columns driving one projection:
+    the ``vai`` (compute-family) column projects the C.I. mode, the ``mb``
+    (memory-family) column the M.I. mode. Each maps ``cap -> (power %,
+    runtime %, energy %)`` relative to the uncapped run.
+
+    The built-in instances carry the paper's measured MI250X columns
+    (:func:`builtin_tables`); :func:`repro.power.surface.response_table`
+    synthesizes model-derived tables for any registered chip, enabling
+    cross-chip projections."""
+
+    vai: ResponseColumn
+    mb: ResponseColumn
+    kind: str = "freq"                   # "freq" (MHz caps) or "power" (W)
+    source: str = "mi250x-table-iii"
+
+
+def builtin_tables(kind: str = "freq") -> ResponseTables:
+    """The paper's measured MI250X Table III columns for ``kind``."""
+    if kind == "freq":
+        return ResponseTables(hw.FREQ_RESPONSE_VAI, hw.FREQ_RESPONSE_MB,
+                              kind="freq")
+    if kind == "power":
+        return ResponseTables(hw.POWER_RESPONSE_VAI, hw.POWER_RESPONSE_MB,
+                              kind="power")
+    raise ValueError(f"kind must be 'freq' or 'power', got {kind!r}")
+
 
 @dataclass
 class ProjectionRow:
@@ -104,6 +135,7 @@ def project_batch(caps: Union[List[float], np.ndarray], kind: str = "freq",
                   e_mi_mwh=hw.FLEET_ENERGY_MI_MWH,
                   e_total_mwh=hw.TOTAL_FLEET_ENERGY_MWH,
                   dt_weight: Union[float, np.ndarray] = DT_WEIGHT_CI,
+                  tables: Optional[ResponseTables] = None,
                   ) -> BatchProjection:
     """Vectorized projection over per-job modal energies.
 
@@ -112,9 +144,19 @@ def project_batch(caps: Union[List[float], np.ndarray], kind: str = "freq",
     :func:`project`); ``dt_weight`` is the fleet constant or a ``(jobs,)``
     array of per-job C.I.-hours weights
     (``DT_WEIGHT_PER_CI_HOUR * hours_frac(3)``).
+
+    ``tables`` selects the response surface: ``None`` means the paper's
+    measured MI250X Table III columns for ``kind``; pass a
+    :class:`ResponseTables` (e.g. from
+    :func:`repro.power.surface.response_table`) to project another chip.
     """
-    vai = hw.FREQ_RESPONSE_VAI if kind == "freq" else hw.POWER_RESPONSE_VAI
-    mb = hw.FREQ_RESPONSE_MB if kind == "freq" else hw.POWER_RESPONSE_MB
+    if tables is None:
+        tables = builtin_tables(kind)
+    elif tables.kind != kind:
+        raise ValueError(
+            f"response tables are {tables.kind!r}-keyed but the projection "
+            f"was asked for kind={kind!r}")
+    vai, mb = tables.vai, tables.mb
     caps = np.asarray(caps, dtype=np.float64)
     r_ci = interp_response_batch(vai, caps)       # (caps, 3)
     r_mi = interp_response_batch(mb, caps)
@@ -140,32 +182,38 @@ def project(caps: List[float], kind: str = "freq",
             e_ci_mwh: float = hw.FLEET_ENERGY_CI_MWH,
             e_mi_mwh: float = hw.FLEET_ENERGY_MI_MWH,
             e_total_mwh: float = hw.TOTAL_FLEET_ENERGY_MWH,
+            tables: Optional[ResponseTables] = None,
             ) -> List[ProjectionRow]:
-    """Paper-faithful projection from the measured MI250X response tables —
-    the single-job special case of :func:`project_batch`."""
+    """Paper-faithful projection from the measured MI250X response tables
+    (or any :class:`ResponseTables` via ``tables=``) — the single-job
+    special case of :func:`project_batch`."""
     return project_batch(caps, kind, e_ci_mwh=np.array([e_ci_mwh]),
                          e_mi_mwh=np.array([e_mi_mwh]),
-                         e_total_mwh=np.array([e_total_mwh])).rows(0)
+                         e_total_mwh=np.array([e_total_mwh]),
+                         tables=tables).rows(0)
 
 
 def project_from_decomposition(decomp, caps: List[float],
-                               kind: str = "freq") -> List[ProjectionRow]:
+                               kind: str = "freq",
+                               tables: Optional[ResponseTables] = None
+                               ) -> List[ProjectionRow]:
     """Same engine, driven by a measured/synthetic ModalDecomposition
     (mode 2 -> M.I., mode 3 -> C.I.)."""
     return project(caps, kind,
                    e_ci_mwh=decomp.energy_mwh.get(3, 0.0),
                    e_mi_mwh=decomp.energy_mwh.get(2, 0.0),
-                   e_total_mwh=decomp.total_energy_mwh)
+                   e_total_mwh=decomp.total_energy_mwh, tables=tables)
 
 
 def domain_targeted_project(domain_energies: Mapping[str, Tuple[float, float]],
                             caps: List[float], kind: str = "freq",
-                            e_total_mwh: float = hw.TOTAL_FLEET_ENERGY_MWH
+                            e_total_mwh: float = hw.TOTAL_FLEET_ENERGY_MWH,
+                            tables: Optional[ResponseTables] = None
                             ) -> Dict[str, List[ProjectionRow]]:
     """Table VI analogue: apply caps only to selected science domains /
     job-size classes. ``domain_energies``: name -> (E_CI, E_MI) MWh."""
     return {name: project(caps, kind, e_ci_mwh=ci, e_mi_mwh=mi,
-                          e_total_mwh=e_total_mwh)
+                          e_total_mwh=e_total_mwh, tables=tables)
             for name, (ci, mi) in domain_energies.items()}
 
 

@@ -64,7 +64,7 @@ def run_sweep(cfg: VAISuiteConfig = VAISuiteConfig(),
         if execute_kernel and L <= 64:   # CPU-interpret budget
             out = kops.vai_op(a, b, c, loopsize=L)
             out.block_until_ready()
-        profile = model.vai_profile(ai, cfg.elements, L)
+        profile = model.vai_profile(cfg.elements, L)
         t0 = model.step_time(profile, 1.0)
         e0 = model.energy_j(profile, 1.0)
         flops, byts = vai_kernel.vai_flops_bytes(cfg.elements, L)

@@ -5,12 +5,21 @@ telemetry, project fleet savings. This package exposes each stage as one
 object and composes them:
 
 chip      — :class:`ChipModel`: chip-bound (time, power, energy) transfer
-            functions under DVFS and power caps
+            functions under DVFS and power caps (scalar views of the
+            surface below)
+surface   — :class:`TransferSurface`: the same transfer functions over
+            broadcastable ``(profiles…, freqs)`` arrays in one pass
+            (numpy or jax backend), vectorized ``sweep_decisions`` /
+            ``freq_for_power_cap``, and :func:`response_table` — model-
+            derived Table III columns for any registered chip (cross-chip
+            projection via ``project(..., tables=...)``)
 policies  — :class:`PowerPolicy` protocol + ``nominal`` / ``static`` /
             ``power-cap`` / ``energy-aware`` implementations, selected by
-            name via :func:`get_policy`
+            name via :func:`get_policy`; each also vectorizes as
+            ``decide_batch(profiles, chip) -> BatchDecision``
 session   — :class:`EnergySession`: policy + actuator + telemetry behind a
-            single ``observe(step, profile, wall_s)`` call
+            single ``observe(step, profile, wall_s)`` call (or one batched
+            ``observe_many(profiles)``)
 fleet     — :class:`FleetAnalysis`: chained telemetry -> modal -> projection
             pipeline (``from_store(ts).decompose().project(caps)``)
 jobs      — job-level fleet: :class:`JobTable` (synthetic multi-job workload
@@ -38,13 +47,15 @@ from repro.core.governor import (  # noqa: F401
 from repro.core.modal import (  # noqa: F401
     BatchModalDecomposition, decompose_batch)
 from repro.core.projection import (  # noqa: F401
-    BatchProjection, ProjectionRow, domain_targeted_project, project,
-    project_batch, validate_against_paper)
+    BatchProjection, ProjectionRow, ResponseTables, builtin_tables,
+    domain_targeted_project, project, project_batch, validate_against_paper)
 from repro.core.telemetry import (  # noqa: F401
     JobLog, JobRecord, StepSample, TelemetryStore)
 from repro.power.chip import (  # noqa: F401
     CHIPS, ChipModel, ChipSpec, MI250X_GCD, MODES, Mode, StepProfile,
     TPU_V5E, profile_from_roofline)
+from repro.power.surface import (  # noqa: F401
+    BatchDecision, ProfileArray, TransferSurface, response_table)
 from repro.power.policies import (  # noqa: F401
     POLICIES, EnergyAwarePolicy, NominalPolicy, PowerCapPolicy, PowerPolicy,
     StaticFrequencyPolicy, get_policy)
@@ -58,6 +69,9 @@ __all__ = [
     # chip model
     "CHIPS", "ChipModel", "ChipSpec", "MI250X_GCD", "MODES", "Mode",
     "StepProfile", "TPU_V5E", "profile_from_roofline",
+    # array-native transfer surface + cross-chip response tables
+    "BatchDecision", "ProfileArray", "ResponseTables", "TransferSurface",
+    "builtin_tables", "response_table",
     # policies
     "POLICIES", "PowerPolicy", "NominalPolicy", "StaticFrequencyPolicy",
     "PowerCapPolicy", "EnergyAwarePolicy", "get_policy",

@@ -11,7 +11,11 @@
     f = chip.freq_for_power_cap(profile, cap_w=150.0)
 
 The implementation lives in :mod:`repro.core.power_model`; the old
-chip-threaded free functions there are deprecation shims.
+chip-threaded free functions there are deprecation shims. Each scalar
+method is the single-element view of the chip's array-native
+:class:`repro.power.surface.TransferSurface` (``chip.surface()``), which
+answers the same questions over whole ``(profiles…, freqs)`` grids in one
+pass.
 """
 from repro.core.hardware import (  # noqa: F401
     CHIPS, ChipSpec, MI250X_GCD, MODES, Mode, TPU_V5E)

@@ -28,7 +28,7 @@ from repro.core.modal import (BatchModalDecomposition, ModalDecomposition,
                               decompose, detect_peaks, power_histogram,
                               synth_fleet_powers)
 from repro.core.projection import (BatchProjection, ProjectionRow,
-                                   domain_targeted_project,
+                                   ResponseTables, domain_targeted_project,
                                    project_from_decomposition)
 from repro.core.telemetry import TelemetryStore
 from repro.power import jobs as jobs_mod
@@ -130,22 +130,27 @@ class FleetAnalysis:
             self.decompose()
         return self.decomposition
 
-    def project(self, caps: List[float], kind: str = "freq"
+    def project(self, caps: List[float], kind: str = "freq",
+                tables: Optional[ResponseTables] = None
                 ) -> List[ProjectionRow]:
         """Project fleet savings for a cap schedule (Tables V/VI engine)
         from this fleet's own modal energy split. ``kind`` is ``"freq"``
-        (MHz caps) or ``"power"`` (watt caps)."""
-        return project_from_decomposition(self._decomposition(), caps, kind)
+        (MHz caps) or ``"power"`` (watt caps); ``tables`` swaps the measured
+        MI250X response surface for a model-derived one (e.g.
+        ``repro.power.response_table("tpu-v5e")`` — cross-chip what-if)."""
+        return project_from_decomposition(self._decomposition(), caps, kind,
+                                          tables=tables)
 
     def project_domains(self,
                         domain_energies: Mapping[str, Tuple[float, float]],
-                        caps: List[float], kind: str = "freq"
+                        caps: List[float], kind: str = "freq",
+                        tables: Optional[ResponseTables] = None
                         ) -> Dict[str, List[ProjectionRow]]:
         """Table VI analogue: cap only selected science domains / job-size
         classes. ``domain_energies``: name -> (E_CI, E_MI) MWh."""
         e_total = self._decomposition().total_energy_mwh
         return domain_targeted_project(domain_energies, caps, kind,
-                                       e_total_mwh=e_total)
+                                       e_total_mwh=e_total, tables=tables)
 
     # ---------------------------------------------------------- job surface
     def _require_jobs(self) -> "jobs_mod.JobTable":
@@ -166,18 +171,23 @@ class FleetAnalysis:
         """Per-job class index into :data:`repro.power.jobs.JOB_CLASSES`."""
         return jobs_mod.classify_jobs(self.per_job())
 
-    def project_jobs(self, caps: Sequence[float], kind: str = "freq"
+    def project_jobs(self, caps: Sequence[float], kind: str = "freq",
+                     tables: Optional[ResponseTables] = None
                      ) -> BatchProjection:
         """Per-job cap projection with per-job dT weights; all arrays are
         ``(jobs, caps)``."""
-        return jobs_mod.project_jobs(self.per_job(), caps, kind)
+        return jobs_mod.project_jobs(self.per_job(), caps, kind,
+                                     tables=tables)
 
     def job_report(self, caps: Optional[Sequence[float]] = None,
-                   kind: str = "freq") -> "jobs_mod.FleetJobsReport":
+                   kind: str = "freq",
+                   tables: Optional[ResponseTables] = None
+                   ) -> "jobs_mod.FleetJobsReport":
         """Per-class cap schedule + aggregate savings (the paper's §V job-
         granular result: C.I. jobs capped for maximum savings, M.I. jobs
         capped at dT=0, latency-bound jobs left alone)."""
-        return jobs_mod.class_cap_report(self.per_job(), caps, kind)
+        return jobs_mod.class_cap_report(self.per_job(), caps, kind,
+                                         tables=tables)
 
     # -------------------------------------------------------------- summary
     def summary(self) -> dict:

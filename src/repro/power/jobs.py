@@ -34,9 +34,9 @@ import numpy as np
 
 from repro.core.hardware import ChipSpec, JOB_SIZE_CLASSES, MI250X_GCD
 from repro.core.modal import BatchModalDecomposition, decompose_batch
-from repro.core.power_model import ChipModel, StepProfile
+from repro.core.power_model import StepProfile
 from repro.core.projection import (BatchProjection, DT_WEIGHT_PER_CI_HOUR,
-                                   project_batch)
+                                   ResponseTables, project_batch)
 from repro.core.telemetry import JobRecord, TelemetryStore
 
 # Job classes, keyed by the Table IV mode whose energy dominates the job.
@@ -229,14 +229,31 @@ def _class_profiles(chip: ChipSpec) -> Dict[str, List[Tuple[str,
     return out
 
 
-def _render_phase(rng: np.random.Generator, model: ChipModel,
-                  profile: StepProfile, n: int, target_w: float) -> np.ndarray:
-    """``n`` power samples of one phase: the chip model's roofline power for
-    this profile is the ceiling; a duty-cycle blend toward idle hits the
-    observed band target, and per-sample jitter stands in for the 15 s
-    aggregation of a noisy signal."""
-    spec = model.spec
-    p_model = model.power_w(profile, 1.0)
+@lru_cache(maxsize=None)
+def _class_power_ceilings(chip: ChipSpec) -> Dict[Tuple[str, str], float]:
+    """Nominal-frequency model power of every (class, arch) main-phase
+    profile — ONE batched :class:`~repro.power.surface.TransferSurface`
+    pass instead of a scalar ``power_w`` call per rendered phase."""
+    # function-level import: repro.power.surface is a sibling submodule,
+    # importing it at module scope would cycle through the package __init__
+    from repro.power.surface import ProfileArray, TransferSurface
+    keys, profs = [], []
+    for job_class, pairs in _class_profiles(chip).items():
+        for arch, prof in pairs:
+            keys.append((job_class, arch))
+            profs.append(prof)
+    powers = TransferSurface(chip).power_w(
+        ProfileArray.from_profiles(profs), 1.0)
+    return {k: float(p) for k, p in zip(keys, powers)}
+
+
+def _render_phase(rng: np.random.Generator, spec: ChipSpec,
+                  p_model: float, n: int, target_w: float) -> np.ndarray:
+    """``n`` power samples of one phase: ``p_model`` (the chip model's
+    roofline power for the phase's profile, from the batched ceiling table)
+    is the ceiling; a duty-cycle blend toward idle hits the observed band
+    target, and per-sample jitter stands in for the 15 s aggregation of a
+    noisy signal."""
     duty = np.clip((target_w - spec.idle_w)
                    / max(p_model - spec.idle_w, 1e-9), 0.02, 1.0)
     base = spec.idle_w + duty * (p_model - spec.idle_w)
@@ -251,12 +268,12 @@ def synth_job_traces(n_jobs: int, seed: int = 0,
                      mean_samples: int = 120, max_samples: int = 360,
                      arrival_gap_s: float = 300.0) -> List[JobTrace]:
     rng = np.random.default_rng(seed)
-    model = ChipModel(chip)
     mix = class_mix or CLASS_MIX
     classes = list(mix)
     p_cls = np.array([mix[c] for c in classes], dtype=np.float64)
     p_cls /= p_cls.sum()
     profiles = _class_profiles(chip)
+    ceilings = _class_power_ceilings(chip)
     size_names = list(_SIZE_CLASS_P)
     p_size = np.array([_SIZE_CLASS_P[s] for s in size_names])
     p_size = p_size / p_size.sum()
@@ -265,7 +282,7 @@ def synth_job_traces(n_jobs: int, seed: int = 0,
     t_arrival = 0.0
     for j in range(n_jobs):
         job_class = classes[rng.choice(len(classes), p=p_cls)]
-        arch, profile = profiles[job_class][
+        arch, _profile = profiles[job_class][
             rng.integers(len(profiles[job_class]))]
         size = size_names[rng.choice(len(size_names), p=p_size)]
         lo, hi, _ = JOB_SIZE_CLASSES[size]
@@ -277,7 +294,8 @@ def synth_job_traces(n_jobs: int, seed: int = 0,
         n_main = max(1, n - n_setup)
         mu, sd = _MAIN_POWER_W[job_class]
         target = rng.normal(mu, sd)
-        main = _render_phase(rng, model, profile, n_main, target)
+        main = _render_phase(rng, chip, ceilings[(job_class, arch)],
+                             n_main, target)
         setup = np.clip(rng.normal(*_SETUP_POWER_W, size=n_setup),
                         chip.idle_w * 0.98, 199.0)
         # periodic checkpoint/io dips inside the main phase
@@ -382,10 +400,31 @@ DEFAULT_POWER_CAPS: Tuple[float, ...] = (500.0, 400.0, 300.0, 200.0)
 DT0_TOL_PCT = 0.5
 
 
+def default_caps(kind: str = "freq",
+                 tables: Optional[ResponseTables] = None
+                 ) -> Tuple[float, ...]:
+    """The cap grid to sweep: with model-derived ``tables`` the grid is the
+    tables' own keys below the uncapped baseline (they may describe a chip
+    with a very different envelope); otherwise the paper's MI250X grids."""
+    if tables is not None:
+        keys = set(tables.vai) | set(tables.mb)
+        top = max(keys)
+        caps = tuple(sorted((float(k) for k in keys if k < top),
+                            reverse=True))
+        if not caps:
+            raise ValueError(
+                f"response tables ({tables.source!r}) carry no cap keys "
+                f"below the uncapped baseline {top}; pass caps= explicitly")
+        return caps
+    return DEFAULT_FREQ_CAPS if kind == "freq" else DEFAULT_POWER_CAPS
+
+
 def class_cap_report(decomp: BatchModalDecomposition,
                      caps: Optional[Sequence[float]] = None,
                      kind: str = "freq",
-                     dt0_tol_pct: float = DT0_TOL_PCT) -> FleetJobsReport:
+                     dt0_tol_pct: float = DT0_TOL_PCT,
+                     tables: Optional[ResponseTables] = None
+                     ) -> FleetJobsReport:
     """Assign each job class its cap and aggregate the projected savings.
 
     Policy (paper §V-C): latency-bound jobs are never capped (no savings
@@ -393,9 +432,12 @@ def class_cap_report(decomp: BatchModalDecomposition,
     cap among those with projected ``dT <= dt0_tol_pct`` (the paper's "no
     performance compromise" criterion); compute-intensive jobs take the
     unconstrained savings-maximizing cap, accepting the projected slowdown.
+
+    ``tables`` swaps the measured MI250X response surface for a
+    model-derived one (cross-chip what-if).
     """
     if caps is None:
-        caps = DEFAULT_FREQ_CAPS if kind == "freq" else DEFAULT_POWER_CAPS
+        caps = default_caps(kind, tables)
     caps = tuple(float(c) for c in caps)
     cls_idx = classify_jobs(decomp)
     e_ci = decomp.energy_mwh[:, 2]              # mode 3 energy per job
@@ -425,7 +467,7 @@ def class_cap_report(decomp: BatchModalDecomposition,
             e_ci_mwh=np.array([e_ci[members].sum()]),
             e_mi_mwh=np.array([e_mi[members].sum()]),
             e_total_mwh=np.array([max(cls_energy, 1e-12)]),
-            dt_weight=np.array([w_cls]))
+            dt_weight=np.array([w_cls]), tables=tables)
         sav = proj.savings_pct[0]
         dt = proj.dt_pct[0]
         best = int(np.argmax(sav))
@@ -457,7 +499,8 @@ def class_cap_report(decomp: BatchModalDecomposition,
 
 
 def project_jobs(decomp: BatchModalDecomposition,
-                 caps: Sequence[float], kind: str = "freq"
+                 caps: Sequence[float], kind: str = "freq",
+                 tables: Optional[ResponseTables] = None
                  ) -> BatchProjection:
     """Per-job savings projection over the whole population with per-job dT
     weights — one vectorized call, no loop over jobs."""
@@ -465,4 +508,4 @@ def project_jobs(decomp: BatchModalDecomposition,
                          e_ci_mwh=decomp.energy_mwh[:, 2],
                          e_mi_mwh=decomp.energy_mwh[:, 1],
                          e_total_mwh=decomp.total_energy_mwh,
-                         dt_weight=job_dt_weights(decomp))
+                         dt_weight=job_dt_weights(decomp), tables=tables)

@@ -20,12 +20,19 @@ from typing import Callable, Dict, Optional, Protocol, Union, runtime_checkable
 
 from repro.core.governor import Decision, sweep_decision
 from repro.core.power_model import ChipModel, StepProfile
+from repro.power.surface import BatchDecision, ProfilesLike
 
 
 @runtime_checkable
 class PowerPolicy(Protocol):
     """A per-step frequency policy. Implementations must be pure: given the
-    same (profile, chip) they return the same Decision and touch nothing."""
+    same (profile, chip) they return the same Decision and touch nothing.
+
+    The built-in policies additionally implement ``decide_batch(profiles,
+    chip) -> BatchDecision`` — one vectorized pass over a whole profile
+    batch, bit-for-bit a Python loop of ``decide``.
+    ``EnergySession.observe_many`` uses it when present and falls back to
+    the scalar loop for third-party policies that only define ``decide``."""
 
     name: str
 
@@ -53,6 +60,10 @@ class NominalPolicy:
     def decide(self, profile: StepProfile, chip: ChipModel) -> Decision:
         return _decision_at(profile, chip, 1.0)
 
+    def decide_batch(self, profiles: ProfilesLike,
+                     chip: ChipModel) -> BatchDecision:
+        return chip.surface().decisions_at(profiles, 1.0)
+
 
 @dataclass(frozen=True)
 class StaticFrequencyPolicy:
@@ -68,6 +79,11 @@ class StaticFrequencyPolicy:
 
     def decide(self, profile: StepProfile, chip: ChipModel) -> Decision:
         return _decision_at(profile, chip, chip.freq_frac(self.freq_mhz))
+
+    def decide_batch(self, profiles: ProfilesLike,
+                     chip: ChipModel) -> BatchDecision:
+        return chip.surface().decisions_at(profiles,
+                                           chip.freq_frac(self.freq_mhz))
 
 
 @dataclass(frozen=True)
@@ -87,6 +103,12 @@ class PowerCapPolicy:
     def decide(self, profile: StepProfile, chip: ChipModel) -> Decision:
         f = chip.freq_for_power_cap(profile, self.cap_w, self.grid)
         return _decision_at(profile, chip, f)
+
+    def decide_batch(self, profiles: ProfilesLike,
+                     chip: ChipModel) -> BatchDecision:
+        surf = chip.surface()
+        f = surf.freq_for_power_cap(profiles, self.cap_w, self.grid)
+        return surf.decisions_at(profiles, f)
 
 
 @dataclass(frozen=True)
@@ -110,6 +132,12 @@ class EnergyAwarePolicy:
                               slowdown_budget=self.slowdown_budget,
                               n_freqs=self.n_freqs,
                               power_cap_w=self.power_cap_w)
+
+    def decide_batch(self, profiles: ProfilesLike,
+                     chip: ChipModel) -> BatchDecision:
+        return chip.surface().sweep_decisions(
+            profiles, slowdown_budget=self.slowdown_budget,
+            n_freqs=self.n_freqs, power_cap_w=self.power_cap_w)
 
 
 # ---------------------------------------------------------------------------

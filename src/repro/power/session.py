@@ -18,13 +18,14 @@ previously each duplicated.
 from __future__ import annotations
 
 import collections
-from typing import Deque, Optional, Union
+from typing import Deque, Optional, Sequence, Union
 
 from repro.core.governor import PowerActuator, Decision, SimulatedActuator
 from repro.core.hardware import ChipSpec, TPU_V5E
 from repro.core.power_model import ChipModel, StepProfile
 from repro.core.telemetry import StepSample, TelemetryStore
 from repro.power.policies import PolicyLike, PowerPolicy, get_policy
+from repro.power.surface import BatchDecision, ProfileArray
 
 
 class EnergySession:
@@ -55,8 +56,29 @@ class EnergySession:
         self.wall_s_total = 0.0
         self._energy_sum = 0.0
         self._baseline_energy_sum = 0.0
+        # running model-time clock: StepSample.t must be monotonic within
+        # the job, so it accumulates each decision's step time (multiplying
+        # the step index by the *current* step time drifts — and can go
+        # backwards — whenever the policy changes frequency mid-job)
+        self._clock_s = 0.0
 
     # ------------------------------------------------------------- observe
+    def _record(self, step: int, d: Decision,
+                wall_s: Optional[float]) -> None:
+        """The single decision -> actuation -> telemetry write path."""
+        self.actuator.apply(d.freq_mhz)
+        self.telemetry.record(StepSample(
+            step=step, t=self._clock_s, duration_s=d.time_s,
+            power_w=d.power_w, energy_j=d.energy_j, mode=d.mode.idx,
+            freq_mhz=d.freq_mhz, job_id=self.job_id))
+        self._clock_s += d.time_s
+        self.decisions.append(d)
+        self.steps += 1
+        self._energy_sum += d.energy_j
+        self._baseline_energy_sum += d.baseline_energy_j
+        if wall_s is not None:
+            self.wall_s_total += wall_s
+
     def observe(self, step: int, profile: StepProfile,
                 wall_s: Optional[float] = None) -> Decision:
         """Record one step: policy decision -> actuation -> telemetry.
@@ -67,18 +89,52 @@ class EnergySession:
         on real hardware the actuator/telemetry read the platform channel).
         """
         d = self.policy.decide(profile, self.chip)
-        self.actuator.apply(d.freq_mhz)
-        self.telemetry.record(StepSample(
-            step=step, t=step * d.time_s, duration_s=d.time_s,
-            power_w=d.power_w, energy_j=d.energy_j, mode=d.mode.idx,
-            freq_mhz=d.freq_mhz, job_id=self.job_id))
-        self.decisions.append(d)
-        self.steps += 1
-        self._energy_sum += d.energy_j
-        self._baseline_energy_sum += d.baseline_energy_j
-        if wall_s is not None:
-            self.wall_s_total += wall_s
+        self._record(step, d, wall_s)
         return d
+
+    def observe_many(self, profiles: Union[Sequence[StepProfile],
+                                           ProfileArray],
+                     wall_s: Union[None, float, Sequence[float]] = None,
+                     start_step: Optional[int] = None) -> BatchDecision:
+        """Record a batch of steps with ONE vectorized policy pass.
+
+        Equivalent to looping :meth:`observe` (same decisions, telemetry,
+        actuation history — tested bit-for-bit) but the policy cost is paid
+        once on the whole batch through ``decide_batch``, so drivers that
+        know many step profiles up front (a serving engine's decode loop, a
+        rendered job phase) amortize the per-step sweep. Steps are numbered
+        from ``start_step`` (default: continues this session's step count);
+        ``wall_s`` is a per-step sequence or a batch total.
+        """
+        batch = profiles if isinstance(profiles, ProfileArray) \
+            else list(profiles)
+        if len(batch) == 0:
+            return BatchDecision.from_decisions([])
+        start = self.steps if start_step is None else start_step
+        if hasattr(self.policy, "decide_batch"):
+            # a ProfileArray goes to the policy as-is — no exploding it
+            # into scalar StepProfiles just to re-coerce them back
+            bd = self.policy.decide_batch(batch, self.chip)
+            ds = bd.decisions()
+        else:                      # third-party policy: scalar fallback
+            if isinstance(batch, ProfileArray):
+                batch = [batch.profile(i) for i in range(len(batch))]
+            ds = [self.policy.decide(p, self.chip) for p in batch]
+            bd = BatchDecision.from_decisions(ds)
+        walls: Sequence[Optional[float]]
+        if wall_s is None:
+            walls = [None] * len(ds)
+        elif isinstance(wall_s, (int, float)):
+            walls = [None] * len(ds)
+            self.wall_s_total += wall_s
+        else:
+            walls = list(wall_s)
+            if len(walls) != len(ds):
+                raise ValueError(
+                    f"wall_s has {len(walls)} entries for {len(ds)} steps")
+        for i, (d, w) in enumerate(zip(ds, walls)):
+            self._record(start + i, d, w)
+        return bd
 
     # ----------------------------------------------------------- lifecycle
     def __enter__(self) -> "EnergySession":

@@ -1,0 +1,436 @@
+"""Array-native chip transfer surface — batched DVFS sweeps and capping.
+
+The scalar :class:`repro.power.ChipModel` answers one ``(profile, freq)``
+question per call; every layer above it that asks many questions used to
+loop in Python (``sweep_decision`` over the frequency grid,
+``PowerCapPolicy`` paying 65 scalar ``power_w`` calls per step,
+``synth_job_traces`` one ``power_w`` per rendered phase).
+:class:`TransferSurface` is the same calibrated transfer functions evaluated
+over broadcastable ``(profiles…, freqs)`` grids in one array pass:
+
+    surf = TransferSurface("tpu-v5e")                # or ChipModel/ChipSpec
+    pa = ProfileArray.from_profiles(step_profiles)   # (N,) roofline batch
+    t = surf.step_time(pa.expand(), freqs)           # (N, F) in one pass
+    bd = surf.sweep_decisions(pa, slowdown_budget=0) # vectorized governor
+
+Guarantees:
+
+* **bit-for-bit parity** with the scalar path: the elementwise formulas here
+  are the canonical implementation — ``ChipModel.step_time`` / ``power_w`` /
+  ``energy_j`` / ``freq_for_power_cap`` are single-element views of this
+  surface, and :meth:`sweep_decisions` replays the exact accept/reject
+  sequence of :func:`repro.core.governor.sweep_decision` (including its
+  1e-12 improvement hysteresis), so a batched sweep equals a Python loop of
+  scalar sweeps element by element;
+* ``freq_for_power_cap`` is an argmax over the whole ``(profiles, grid)``
+  power array instead of a per-frequency Python loop;
+* an optional ``jax.numpy`` backend (``backend="jax"``) so sweeps can be
+  ``jax.jit``-ed alongside the Pallas kernels.  The jax backend follows
+  jax's default dtype (float32 unless x64 is enabled), so it is numerically
+  close to — not bit-identical with — the float64 numpy backend.
+
+:func:`response_table` uses the surface to synthesize Table III-style
+``(power %, runtime %, energy %)`` response columns for *any* registered
+chip, which :func:`repro.core.projection.project_batch` and
+``FleetAnalysis`` accept in place of the built-in measured MI250X tables —
+the cross-chip what-if projection the paper stops short of.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.governor import Decision
+from repro.core.hardware import ChipSpec, MODES, TPU_V5E
+from repro.core.power_model import (GAMMA, W_COMPUTE, W_MEMORY, W_NETWORK,
+                                    ChipModel, StepProfile)
+from repro.core.projection import ResponseTables
+
+ProfilesLike = Union["ProfileArray", StepProfile, Sequence[StepProfile], Any]
+
+
+@dataclass(frozen=True)
+class ProfileArray:
+    """A batch of roofline positions as three broadcastable arrays (seconds
+    at nominal frequency, like :class:`StepProfile`). Any common shape works
+    — ``(N,)`` job batches, ``(jobs, phases)`` grids, 0-d scalars."""
+
+    compute_s: Any
+    memory_s: Any
+    collective_s: Any
+
+    @classmethod
+    def from_profiles(cls, profiles: Sequence[StepProfile],
+                      xp=np) -> "ProfileArray":
+        dtype = np.float64 if xp is np else None
+        return cls(
+            xp.asarray([p.compute_s for p in profiles], dtype=dtype),
+            xp.asarray([p.memory_s for p in profiles], dtype=dtype),
+            xp.asarray([p.collective_s for p in profiles], dtype=dtype))
+
+    @classmethod
+    def coerce(cls, profiles: ProfilesLike, xp=np) -> "ProfileArray":
+        """Accept a ProfileArray, one StepProfile, a sequence of
+        StepProfiles, or an array-like of shape ``(..., 3)``."""
+        dtype = np.float64 if xp is np else None
+        if isinstance(profiles, ProfileArray):
+            return cls(xp.asarray(profiles.compute_s, dtype=dtype),
+                       xp.asarray(profiles.memory_s, dtype=dtype),
+                       xp.asarray(profiles.collective_s, dtype=dtype))
+        if isinstance(profiles, StepProfile):
+            return cls(xp.asarray(profiles.compute_s, dtype=dtype),
+                       xp.asarray(profiles.memory_s, dtype=dtype),
+                       xp.asarray(profiles.collective_s, dtype=dtype))
+        if isinstance(profiles, (list, tuple)) and profiles and \
+                isinstance(profiles[0], StepProfile):
+            return cls.from_profiles(profiles, xp=xp)
+        arr = xp.asarray(profiles, dtype=dtype)
+        if arr.ndim < 1 or arr.shape[-1] != 3:
+            raise ValueError(
+                "profiles must be a ProfileArray, StepProfile(s), or an "
+                f"array of (compute_s, memory_s, collective_s) triples; got "
+                f"shape {getattr(arr, 'shape', None)}")
+        return cls(arr[..., 0], arr[..., 1], arr[..., 2])
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return np.broadcast_shapes(np.shape(self.compute_s),
+                                   np.shape(self.memory_s),
+                                   np.shape(self.collective_s))
+
+    def __len__(self) -> int:
+        return int(self.shape[0])
+
+    def expand(self) -> "ProfileArray":
+        """Append a trailing length-1 axis so the batch broadcasts against a
+        frequency grid: ``surf.power_w(pa.expand(), freqs)`` -> ``(N, F)``.
+        Backend-agnostic: jax arrays (including tracers under ``jax.jit``)
+        are indexed in place, never round-tripped through host numpy."""
+        def _e(x):
+            if hasattr(x, "ndim"):          # any array (numpy/jax/tracer)
+                return x[..., None]
+            return np.asarray(x)[..., None]
+        return ProfileArray(_e(self.compute_s), _e(self.memory_s),
+                            _e(self.collective_s))
+
+    def profile(self, i: int) -> StepProfile:
+        return StepProfile(float(np.asarray(self.compute_s)[i]),
+                           float(np.asarray(self.memory_s)[i]),
+                           float(np.asarray(self.collective_s)[i]))
+
+
+@dataclass
+class BatchDecision:
+    """Vectorized :class:`repro.core.governor.Decision`: every field is an
+    array over the profile batch; :meth:`decision` lifts one element back
+    into the scalar Decision the drivers/telemetry speak (bit-for-bit the
+    scalar sweep's output)."""
+
+    freq_mhz: Any                       # int array
+    freq_frac: Any
+    mode_idx: Any                       # paper mode index 1..4
+    time_s: Any
+    power_w: Any
+    energy_j: Any
+    baseline_energy_j: Any
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return np.shape(self.freq_frac)
+
+    def __len__(self) -> int:
+        return int(self.shape[0])
+
+    @property
+    def savings_pct(self) -> Any:
+        return 100.0 * (1.0 - self.energy_j
+                        / np.maximum(self.baseline_energy_j, 1e-12))
+
+    def decision(self, i) -> Decision:
+        return Decision(
+            freq_mhz=int(self.freq_mhz[i]),
+            freq_frac=float(self.freq_frac[i]),
+            mode=MODES[int(self.mode_idx[i]) - 1],
+            time_s=float(self.time_s[i]),
+            power_w=float(self.power_w[i]),
+            energy_j=float(self.energy_j[i]),
+            baseline_energy_j=float(self.baseline_energy_j[i]))
+
+    def decisions(self) -> List[Decision]:
+        return [self.decision(i) for i in range(len(self))]
+
+    @classmethod
+    def from_decisions(cls, ds: Sequence[Decision]) -> "BatchDecision":
+        return cls(
+            freq_mhz=np.asarray([d.freq_mhz for d in ds], dtype=np.int64),
+            freq_frac=np.asarray([d.freq_frac for d in ds]),
+            mode_idx=np.asarray([d.mode.idx for d in ds], dtype=np.int64),
+            time_s=np.asarray([d.time_s for d in ds]),
+            power_w=np.asarray([d.power_w for d in ds]),
+            energy_j=np.asarray([d.energy_j for d in ds]),
+            baseline_energy_j=np.asarray(
+                [d.baseline_energy_j for d in ds]))
+
+
+class TransferSurface:
+    """The power/performance transfer functions of one chip evaluated over
+    broadcastable arrays. ``backend="numpy"`` (default, float64, bit-for-bit
+    with the scalar ChipModel) or ``backend="jax"`` (``jax.numpy``,
+    jittable)."""
+
+    def __init__(self, chip: Union[ChipSpec, str, ChipModel] = TPU_V5E,
+                 backend: str = "numpy"):
+        self.chip = ChipModel(chip)
+        self.spec: ChipSpec = self.chip.spec
+        self.backend = backend
+        if backend == "numpy":
+            self.xp = np
+        elif backend == "jax":
+            import jax.numpy as jnp
+            self.xp = jnp
+        else:
+            raise ValueError(
+                f"unknown backend {backend!r}; known: 'numpy', 'jax'")
+
+    def __repr__(self) -> str:
+        return f"TransferSurface({self.spec.name!r}, backend={self.backend!r})"
+
+    # ----------------------------------------------------- transfer surface
+    # These elementwise formulas are the canonical implementation; the
+    # scalar ChipModel methods are single-element views of them. Each
+    # method has a scalar fast path (a StepProfile at one python-float
+    # frequency skips array coercion entirely — the per-step online policy
+    # paths can't batch and must stay cheap); the fast path is bit-for-bit
+    # with the array path because +,*,/,max,min are exactly rounded either
+    # way and the one op that isn't — pow — goes through _pow_gamma in
+    # both. test_surface pins the parity across a profile grid.
+    def _scalar(self, profiles, freq_frac) -> bool:
+        return (self.xp is np and isinstance(profiles, StepProfile)
+                and isinstance(freq_frac, (int, float)))
+
+    def _pow_gamma(self, freq_frac):
+        # asarray before ** so every input shape hits numpy's array pow
+        # (it differs from python's pow by 1 ulp on some inputs)
+        return self.xp.asarray(freq_frac) ** GAMMA
+
+    def step_time(self, profiles: ProfilesLike, freq_frac=1.0):
+        if self._scalar(profiles, freq_frac):
+            return max(profiles.compute_s / max(freq_frac, 1e-6),
+                       profiles.memory_s, profiles.collective_s, 1e-12)
+        xp = self.xp
+        p = ProfileArray.coerce(profiles, xp)
+        f = xp.maximum(freq_frac, 1e-6)
+        return xp.maximum(xp.maximum(p.compute_s / f, p.memory_s),
+                          xp.maximum(p.collective_s, 1e-12))
+
+    def utilizations(self, profiles: ProfilesLike, freq_frac=1.0):
+        if self._scalar(profiles, freq_frac):
+            t = self.step_time(profiles, freq_frac)
+            f = max(freq_frac, 1e-6)
+            return (profiles.compute_s / f / t, profiles.memory_s / t,
+                    profiles.collective_s / t)
+        xp = self.xp
+        p = ProfileArray.coerce(profiles, xp)
+        t = self.step_time(p, freq_frac)
+        f = xp.maximum(freq_frac, 1e-6)
+        return (p.compute_s / f / t, p.memory_s / t, p.collective_s / t)
+
+    def power_w(self, profiles: ProfilesLike, freq_frac=1.0):
+        spec = self.spec
+        span = spec.tdp_w - spec.idle_w
+        if self._scalar(profiles, freq_frac):
+            u_c, u_m, u_n = self.utilizations(profiles, freq_frac)
+            p = spec.idle_w + span * (
+                W_COMPUTE * u_c * float(self._pow_gamma(freq_frac))
+                + W_MEMORY * u_m + W_NETWORK * u_n)
+            return min(p, spec.tdp_w)
+        xp = self.xp
+        u_c, u_m, u_n = self.utilizations(profiles, freq_frac)
+        p = spec.idle_w + span * (W_COMPUTE * u_c * self._pow_gamma(freq_frac)
+                                  + W_MEMORY * u_m + W_NETWORK * u_n)
+        return xp.minimum(p, spec.tdp_w)
+
+    def energy_j(self, profiles: ProfilesLike, freq_frac=1.0):
+        if self._scalar(profiles, freq_frac):
+            return self.power_w(profiles, freq_frac) \
+                * self.step_time(profiles, freq_frac)
+        p = ProfileArray.coerce(profiles, self.xp)
+        return self.power_w(p, freq_frac) * self.step_time(p, freq_frac)
+
+    def classify_mode_idx(self, profiles: ProfilesLike, freq_frac=1.0):
+        """Structural mode index (1..4) per element — the array form of
+        :meth:`ChipModel.classify_mode`."""
+        if self._scalar(profiles, freq_frac):
+            u_c, u_m, u_n = self.utilizations(profiles, freq_frac)
+            if u_n >= max(u_c, u_m):
+                return 1
+            return 2 if u_m >= u_c else 3
+        xp = self.xp
+        u_c, u_m, u_n = self.utilizations(profiles, freq_frac)
+        return xp.where(u_n >= xp.maximum(u_c, u_m), 1,
+                        xp.where(u_m >= u_c, 2, 3))
+
+    # ------------------------------------------------------------- capping
+    def freq_for_power_cap(self, profiles: ProfilesLike, cap_w,
+                           grid: int = 64):
+        """RAPL-style enforcement as one argmax over the whole grid: the
+        highest grid frequency whose power stays under ``cap_w`` (the DVFS
+        floor when even that breaches — paper Fig. 6d). ``cap_w`` broadcasts
+        against the profile batch."""
+        xp = self.xp
+        lo = self.chip.f_min_frac
+        i = xp.arange(grid + 1,
+                      dtype=np.float64 if xp is np else None)
+        fgrid = lo + ((1.0 - lo) * i) / grid
+        p = ProfileArray.coerce(profiles, xp)
+        pw = self.power_w(ProfileArray(
+            xp.asarray(p.compute_s)[..., None],
+            xp.asarray(p.memory_s)[..., None],
+            xp.asarray(p.collective_s)[..., None]), fgrid)
+        ok = pw <= xp.asarray(cap_w)[..., None]
+        return xp.max(xp.where(ok, fgrid, lo), axis=-1)
+
+    # ----------------------------------------------------------- decisions
+    def decisions_at(self, profiles: ProfilesLike,
+                     freq_frac) -> BatchDecision:
+        """Full decision record at a fixed (per-element) frequency — the
+        vectorized ``repro.power.policies._decision_at``."""
+        xp = self.xp
+        p = ProfileArray.coerce(profiles, xp)
+        e0 = self.energy_j(p, 1.0)
+        t = self.step_time(p, freq_frac)
+        pw = self.power_w(p, freq_frac)
+        e = self.energy_j(p, freq_frac)
+        mode = self.classify_mode_idx(p)
+        ff = xp.asarray(freq_frac) * xp.ones_like(t)
+        mhz = xp.rint(ff * self.spec.f_nominal_mhz).astype(int)
+        mhz, ff, mode, t, pw, e, e0 = xp.broadcast_arrays(
+            mhz, ff, mode, t, pw, e, e0)
+        return BatchDecision(freq_mhz=mhz, freq_frac=ff, mode_idx=mode,
+                             time_s=t, power_w=pw, energy_j=e,
+                             baseline_energy_j=e0)
+
+    def sweep_decisions(self, profiles: ProfilesLike,
+                        slowdown_budget: float = 0.0, n_freqs: int = 11,
+                        power_cap_w: Optional[float] = None
+                        ) -> BatchDecision:
+        """The paper's energy-minimizing frequency sweep, vectorized over
+        the profile batch — bit-for-bit a Python loop of
+        :func:`repro.core.governor.sweep_decision` (same grid, same
+        sequential accept rule with its 1e-12 improvement hysteresis)."""
+        xp = self.xp
+        p = ProfileArray.coerce(profiles, xp)
+        t0 = self.step_time(p, 1.0)
+        e0 = self.energy_j(p, 1.0)
+        budget = t0 * (1.0 + slowdown_budget)
+        best_f = xp.ones_like(t0)
+        best_e = e0
+        for f in self.chip.freq_grid(n_freqs):
+            t = self.step_time(p, f)
+            e = self.energy_j(p, f)
+            ok = (e < best_e - 1e-12) & (t <= budget * (1.0 + 1e-9))
+            if power_cap_w is not None:
+                ok = ok & (self.power_w(p, f) <= power_cap_w)
+            best_f = xp.where(ok, f, best_f)
+            best_e = xp.where(ok, e, best_e)
+        mhz = xp.rint(best_f * self.spec.f_nominal_mhz).astype(int)
+        return BatchDecision(
+            freq_mhz=mhz, freq_frac=best_f,
+            mode_idx=self.classify_mode_idx(p),
+            time_s=self.step_time(p, best_f),
+            power_w=self.power_w(p, best_f),
+            energy_j=best_e, baseline_energy_j=e0)
+
+
+# ---------------------------------------------------------------------------
+# Model-derived response tables (cross-chip Table III analogue)
+# ---------------------------------------------------------------------------
+# VAI family: the paper's arithmetic-intensity sweep (AI = 2L / 8 bytes per
+# element at itemsize 4 -> loopsize L = 8 * AI), spanning stream-copy to far
+# past the roofline ridge. MB family: HBM-streaming probes at several
+# compute/memory overlap ratios (the MB benchmark's data-size sweep
+# collapses to the ratio in this roofline model).
+VAI_TABLE_AIS: Tuple[float, ...] = (0.0625, 0.25, 1.0, 4.0, 16.0, 64.0,
+                                    256.0, 1024.0)
+MB_TABLE_RATIOS: Tuple[float, ...] = (0.02, 0.05, 0.1, 0.2)
+_TABLE_N_ELEMS = 1 << 20
+DEFAULT_POWER_CAP_FRACS: Tuple[float, ...] = (1.0, 0.9, 0.72, 0.54, 0.36)
+
+
+def _vai_family(chip: ChipModel) -> List[StepProfile]:
+    return [chip.vai_profile(_TABLE_N_ELEMS, int(round(ai * 8)))
+            for ai in VAI_TABLE_AIS]
+
+
+def _mb_family(chip: ChipModel) -> List[StepProfile]:
+    return [StepProfile(compute_s=r, memory_s=1.0) for r in MB_TABLE_RATIOS]
+
+
+def response_table(chip: Union[ChipSpec, str, ChipModel],
+                   caps: Optional[Sequence[float]] = None,
+                   kind: str = "freq", grid: int = 64,
+                   backend: str = "numpy") -> ResponseTables:
+    """Synthesize Table III-style response columns for any registered chip.
+
+    For each cap the VAI (compute-family) and MB (memory-family) benchmark
+    profiles are pushed through the chip's :class:`TransferSurface` in one
+    ``(profiles, caps)`` pass; the columns are the family averages relative
+    to the uncapped run, in the paper's format: ``power %`` as the ratio of
+    mean powers, ``runtime %`` / ``energy %`` as means of per-profile
+    ratios (matching :func:`repro.core.vai.response_table`).
+
+    ``kind="freq"``: caps are clock values in MHz (default: the chip's own
+    6-point DVFS grid). ``kind="power"``: caps are watt limits (default:
+    :data:`DEFAULT_POWER_CAP_FRACS` of TDP), enforced RAPL-style through
+    :meth:`TransferSurface.freq_for_power_cap`.
+
+    The result plugs into :func:`repro.core.projection.project_batch` /
+    ``FleetAnalysis.project(..., tables=...)`` in place of the measured
+    MI250X tables — the cross-chip what-if projection.
+    """
+    surf = TransferSurface(chip, backend=backend)
+    model = surf.chip
+    if kind == "freq":
+        if caps is None:
+            caps = [model.freq_mhz(f) for f in model.freq_grid(6)][::-1]
+    elif kind == "power":
+        if caps is None:
+            caps = [frac * surf.spec.tdp_w for frac in DEFAULT_POWER_CAP_FRACS]
+    else:
+        raise ValueError(f"kind must be 'freq' or 'power', got {kind!r}")
+    caps = list(caps)
+    keys = [int(round(c)) for c in caps]
+    if len(set(keys)) != len(keys):
+        raise ValueError(
+            f"caps {caps} collide after integer rounding ({keys}); response "
+            f"tables are integer-keyed — space caps at least 1 "
+            f"{'MHz' if kind == 'freq' else 'W'} apart")
+
+    columns = {}
+    for name, family in (("vai", _vai_family(model)),
+                         ("mb", _mb_family(model))):
+        pa = ProfileArray.from_profiles(family, xp=surf.xp)
+        grid_pa = pa.expand()                                 # (P, 1)
+        if kind == "freq":
+            fr = np.asarray([model.freq_frac(c) for c in caps])  # (C,)
+        else:
+            fr = surf.freq_for_power_cap(grid_pa,
+                                         np.asarray(caps, dtype=np.float64),
+                                         grid=grid)              # (P, C)
+        t = np.asarray(surf.step_time(grid_pa, fr))
+        p = np.asarray(surf.power_w(grid_pa, fr))
+        e = np.asarray(surf.energy_j(grid_pa, fr))
+        t0 = np.asarray(surf.step_time(pa, 1.0))[:, None]
+        p0 = np.asarray(surf.power_w(pa, 1.0))[:, None]
+        e0 = np.asarray(surf.energy_j(pa, 1.0))[:, None]
+        power_pct = 100.0 * p.mean(axis=0) / p0.mean()
+        runtime_pct = 100.0 * (t / t0).mean(axis=0)
+        energy_pct = 100.0 * (e / e0).mean(axis=0)
+        columns[name] = {
+            k: (float(power_pct[j]), float(runtime_pct[j]),
+                float(energy_pct[j]))
+            for j, k in enumerate(keys)}
+    return ResponseTables(vai=columns["vai"], mb=columns["mb"], kind=kind,
+                          source=f"model:{surf.spec.name}")

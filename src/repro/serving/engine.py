@@ -18,6 +18,12 @@ from repro.models import decode as decode_mod
 from repro.models.transformer import Runtime
 
 
+def _wall_profile(wall_s: float) -> StepProfile:
+    """Decode-step roofline guess when no profile is supplied: HBM-bound
+    (decode streams the weights), wall-clock as the memory term."""
+    return StepProfile(compute_s=wall_s * 0.1, memory_s=wall_s)
+
+
 @dataclass
 class Request:
     prompt: np.ndarray            # [S] int32
@@ -73,6 +79,7 @@ class ServeEngine:
                       self.max_len - plen)
         outs = []
         tok = None
+        walls: List[float] = []
         for i in range(max_new):
             key, sub = jax.random.split(key)
             tok = self._sample(logits, temperature, sub)
@@ -82,13 +89,16 @@ class ServeEngine:
             logits, state = self._decode(self.params, tok[:, None], pos,
                                          state)
             jax.block_until_ready(logits)
-            self._record(i, time.perf_counter() - t0)
+            wall = time.perf_counter() - t0
+            walls.append(wall)
+            if self.session is not None and self.profile is None:
+                # profile derived from this step's wall-clock: must record
+                # online, one step at a time
+                self.session.observe(i, _wall_profile(wall), wall)
+        if self.session is not None and self.profile is not None:
+            # known decode profile: one vectorized policy pass for the whole
+            # decode loop instead of max_new scalar sweeps
+            self.session.observe_many([self.profile] * max_new,
+                                      wall_s=walls, start_step=0)
         gen = np.stack(outs, axis=1)                     # [B, max_new]
         return [gen[i] for i in range(B)]
-
-    def _record(self, step: int, wall_s: float) -> None:
-        if self.session is None:
-            return
-        prof = self.profile or StepProfile(
-            compute_s=wall_s * 0.1, memory_s=wall_s)
-        self.session.observe(step, prof, wall_s)

@@ -5,9 +5,12 @@ from conftest import given, settings, st  # hypothesis, or skip-stubs
 
 from repro.core import power_model as pm
 from repro.core.governor import GovernorConfig, PowerGovernor
+from repro.core.power_model import ChipModel
 from repro.core.hardware import MI250X_GCD, MODES
 from repro.core.modal import (classify_power, decompose, detect_peaks,
                               power_histogram, synth_fleet_powers)
+
+CHIP = ChipModel()
 
 
 def test_synth_fleet_matches_table_iv_hours():
@@ -50,7 +53,7 @@ profiles = st.builds(pm.StepProfile,
 def test_governor_never_violates_dt0_budget(p):
     gov = PowerGovernor(GovernorConfig(slowdown_budget=0.0))
     d = gov.choose(p)
-    assert d.time_s <= pm.step_time(p, 1.0) * (1 + 1e-9)
+    assert d.time_s <= CHIP.step_time(p, 1.0) * (1 + 1e-9)
     assert d.energy_j <= d.baseline_energy_j + 1e-9
 
 
@@ -59,7 +62,7 @@ def test_governor_never_violates_dt0_budget(p):
 def test_governor_budget_respected(p, budget):
     gov = PowerGovernor(GovernorConfig(slowdown_budget=budget))
     d = gov.choose(p)
-    assert d.time_s <= pm.step_time(p, 1.0) * (1 + budget) * (1 + 1e-9)
+    assert d.time_s <= CHIP.step_time(p, 1.0) * (1 + budget) * (1 + 1e-9)
 
 
 def test_governor_downclocks_memory_bound():

@@ -116,16 +116,20 @@ def test_freq_grid_single_point_and_validation():
 
 # ------------------------------------------------------ session equivalence
 def test_session_matches_old_governor_record_path():
-    """EnergySession.observe must write byte-identical telemetry to the old
-    `_record_energy` governor branch in launch/train.py."""
+    """EnergySession.observe must write byte-identical telemetry to the
+    hand-rolled governor record loop (the old launch/train.py branch, with
+    its ``t = step * time_s`` clock replaced by the cumulative clock — the
+    index-multiplication drifts whenever the policy changes frequency)."""
     old = TelemetryStore(window_s=15.0)
     gov = PowerGovernor(GovernorConfig(slowdown_budget=0.1))
+    clock = 0.0
     for step, prof in enumerate(PROFILE_GRID):
         d = gov.choose(prof)
         old.record(StepSample(
-            step=step, t=step * d.time_s, duration_s=d.time_s,
+            step=step, t=clock, duration_s=d.time_s,
             power_w=d.power_w, energy_j=d.energy_j, mode=d.mode.idx,
             freq_mhz=d.freq_mhz))
+        clock += d.time_s
 
     sess = EnergySession(policy="energy-aware", slowdown_budget=0.1,
                          window_s=15.0)
@@ -137,12 +141,14 @@ def test_session_matches_old_governor_record_path():
 def test_session_matches_old_baseline_record_path():
     """...and to the old non-governor branch (nominal frequency, 1700 MHz)."""
     old = TelemetryStore(window_s=15.0)
+    clock = 0.0
     for step, prof in enumerate(PROFILE_GRID):
         p = CHIP.power_w(prof, 1.0)
         old.record(StepSample(
-            step=step, t=step * prof.total_s, duration_s=prof.total_s,
+            step=step, t=clock, duration_s=prof.total_s,
             power_w=p, energy_j=p * prof.total_s,
             mode=CHIP.classify_mode(prof).idx, freq_mhz=1700))
+        clock += prof.total_s
 
     sess = EnergySession(policy="nominal", window_s=15.0)
     for step, prof in enumerate(PROFILE_GRID):

@@ -1,9 +1,19 @@
-"""Power model invariants (hypothesis) + calibration endpoints."""
+"""Power model invariants (hypothesis) + calibration endpoints.
+
+All assertions go through the bound :class:`ChipModel` API — the deprecated
+chip-threaded free functions are exercised only by the dedicated shim tests
+below (the test lane turns in-tree DeprecationWarnings into errors, so any
+other caller regressing onto a shim fails loudly).
+"""
+import inspect
+
 import pytest
 from conftest import given, settings, st  # hypothesis, or skip-stubs
 
 from repro.core import power_model as pm
 from repro.core.hardware import MI250X_GCD, TPU_V5E
+
+CHIP = pm.ChipModel(TPU_V5E)
 
 profiles = st.builds(
     pm.StepProfile,
@@ -18,13 +28,13 @@ freqs = st.floats(0.41, 1.0)  # 700/1700 .. 1
 @given(p=profiles, f1=freqs, f2=freqs)
 def test_time_monotone_in_frequency(p, f1, f2):
     lo, hi = min(f1, f2), max(f1, f2)
-    assert pm.step_time(p, lo) >= pm.step_time(p, hi) - 1e-12
+    assert CHIP.step_time(p, lo) >= CHIP.step_time(p, hi) - 1e-12
 
 
 @settings(max_examples=60, deadline=None)
 @given(p=profiles, f=freqs)
 def test_power_within_envelope(p, f):
-    w = pm.power_w(p, f)
+    w = CHIP.power_w(p, f)
     assert TPU_V5E.idle_w - 1e-9 <= w <= TPU_V5E.tdp_w + 1e-9
 
 
@@ -36,26 +46,27 @@ def test_power_cap_respected_or_breached_at_floor(p, cap_frac):
     paper observes at 140/200 W. Otherwise the chosen frequency must meet
     the cap."""
     cap = TPU_V5E.idle_w + cap_frac * (TPU_V5E.tdp_w - TPU_V5E.idle_w)
-    f = pm.freq_for_power_cap(p, cap)
+    f = CHIP.freq_for_power_cap(p, cap)
     f_min = TPU_V5E.f_min_mhz / TPU_V5E.f_nominal_mhz
-    floor_power = pm.power_w(p, f_min)
+    floor_power = CHIP.power_w(p, f_min)
     if floor_power > cap:
         assert f == pytest.approx(f_min)      # breach case (paper Fig. 6d)
     else:
-        assert pm.power_w(p, f) <= cap + 1e-6
+        assert CHIP.power_w(p, f) <= cap + 1e-6
 
 
 def test_memory_bound_work_is_frequency_insensitive():
     """Paper Fig. 6: HBM-bound runtime unchanged by downclocking."""
     p = pm.StepProfile(compute_s=0.1, memory_s=1.0)
-    assert pm.step_time(p, 0.5) == pytest.approx(pm.step_time(p, 1.0))
+    assert CHIP.step_time(p, 0.5) == pytest.approx(CHIP.step_time(p, 1.0))
     # and energy strictly improves
-    assert pm.energy_j(p, 0.5) < pm.energy_j(p, 1.0)
+    assert CHIP.energy_j(p, 0.5) < CHIP.energy_j(p, 1.0)
 
 
 def test_compute_bound_scales_with_frequency():
     p = pm.StepProfile(compute_s=1.0, memory_s=0.05)
-    assert pm.step_time(p, 0.5) == pytest.approx(2.0 * pm.step_time(p, 1.0))
+    assert CHIP.step_time(p, 0.5) == pytest.approx(
+        2.0 * CHIP.step_time(p, 1.0))
 
 
 def test_tdp_only_when_both_saturated():
@@ -63,22 +74,22 @@ def test_tdp_only_when_both_saturated():
     both = pm.StepProfile(compute_s=1.0, memory_s=1.0)
     mem_only = pm.StepProfile(compute_s=0.01, memory_s=1.0)
     cmp_only = pm.StepProfile(compute_s=1.0, memory_s=0.01)
-    assert pm.power_w(both, 1.0) == pytest.approx(TPU_V5E.tdp_w)
-    assert pm.power_w(mem_only, 1.0) < 0.8 * TPU_V5E.tdp_w
-    assert pm.power_w(cmp_only, 1.0) < 0.85 * TPU_V5E.tdp_w
+    assert CHIP.power_w(both, 1.0) == pytest.approx(TPU_V5E.tdp_w)
+    assert CHIP.power_w(mem_only, 1.0) < 0.8 * TPU_V5E.tdp_w
+    assert CHIP.power_w(cmp_only, 1.0) < 0.85 * TPU_V5E.tdp_w
 
 
 def test_mode_classification_structural():
-    assert pm.classify_mode(pm.StepProfile(0.01, 0.02, 1.0)).idx == 1
-    assert pm.classify_mode(pm.StepProfile(0.15, 1.0, 0.0)).idx == 2
-    assert pm.classify_mode(pm.StepProfile(1.0, 0.3, 0.0)).idx == 3
+    assert CHIP.classify_mode(pm.StepProfile(0.01, 0.02, 1.0)).idx == 1
+    assert CHIP.classify_mode(pm.StepProfile(0.15, 1.0, 0.0)).idx == 2
+    assert CHIP.classify_mode(pm.StepProfile(1.0, 0.3, 0.0)).idx == 3
 
 
 def test_mode_classification_from_power_bands():
-    assert pm.classify_mode_from_power(60.0).idx == 1
-    assert pm.classify_mode_from_power(140.0).idx == 2
-    assert pm.classify_mode_from_power(200.0).idx == 3
-    assert pm.classify_mode_from_power(230.0).idx == 4
+    assert CHIP.classify_mode_from_power(60.0).idx == 1
+    assert CHIP.classify_mode_from_power(140.0).idx == 2
+    assert CHIP.classify_mode_from_power(200.0).idx == 3
+    assert CHIP.classify_mode_from_power(230.0).idx == 4
 
 
 def test_vai_profile_roofline_shape():
@@ -86,8 +97,47 @@ def test_vai_profile_roofline_shape():
     powers = {}
     for ai in [0.0625, 0.5, 2, 8, 64, 1024]:
         L = int(round(ai * 8))
-        prof = pm.vai_profile(ai, 1 << 20, L)
-        powers[ai] = pm.power_w(prof, 1.0)
+        prof = CHIP.vai_profile(1 << 20, L)
+        powers[ai] = CHIP.power_w(prof, 1.0)
     ridge_ai = max(powers, key=powers.get)
     assert 2 <= ridge_ai <= 64  # ridge of the VPU roofline
     assert powers[0.0625] < powers[ridge_ai]
+
+
+def test_vai_profile_bound_method_dropped_dead_ai_param():
+    """Pin the chosen fix for the dead ``ai`` argument: the bound method
+    signature is (n_elems, loopsize, itemsize) — loopsize alone determines
+    the intensity — while the deprecated shim keeps its historical
+    (ai, n_elems, loopsize, chip, itemsize) signature and ignores ai."""
+    assert list(inspect.signature(CHIP.vai_profile).parameters) == \
+        ["n_elems", "loopsize", "itemsize"]
+    shim_params = list(inspect.signature(pm.vai_profile).parameters)
+    assert shim_params == ["ai", "n_elems", "loopsize", "chip", "itemsize"]
+    with pytest.warns(DeprecationWarning):
+        via_shim = pm.vai_profile(123.456, 1 << 16, 8)   # ai value is inert
+    assert via_shim == CHIP.vai_profile(1 << 16, 8)
+    with pytest.warns(DeprecationWarning):
+        assert pm.vai_profile(0.0, 1 << 16, 8) == via_shim
+
+
+def test_deprecated_shims_warn_and_match_bound_methods():
+    """The chip-threaded free functions still work for out-of-tree callers
+    — warning — and return exactly the bound-method values."""
+    p = pm.StepProfile(0.3, 0.7, 0.1)
+    mi = pm.ChipModel(MI250X_GCD)
+    with pytest.warns(DeprecationWarning):
+        assert pm.step_time(p, 0.8) == CHIP.step_time(p, 0.8)
+    with pytest.warns(DeprecationWarning):
+        assert pm.utilizations(p, 0.8) == CHIP.utilizations(p, 0.8)
+    with pytest.warns(DeprecationWarning):
+        assert pm.power_w(p, 0.8, MI250X_GCD) == mi.power_w(p, 0.8)
+    with pytest.warns(DeprecationWarning):
+        assert pm.energy_j(p, 0.8) == CHIP.energy_j(p, 0.8)
+    with pytest.warns(DeprecationWarning):
+        assert pm.freq_for_power_cap(p, 150.0) == \
+            CHIP.freq_for_power_cap(p, 150.0)
+    with pytest.warns(DeprecationWarning):
+        assert pm.classify_mode(p) == CHIP.classify_mode(p)
+    with pytest.warns(DeprecationWarning):
+        assert pm.classify_mode_from_power(140.0) == \
+            CHIP.classify_mode_from_power(140.0)

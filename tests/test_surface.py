@@ -1,0 +1,385 @@
+"""The array-native transfer surface (`repro.power.surface`): scalar/batched
+bit-for-bit parity, physical monotonicity properties, vectorized policy and
+session paths, the fixed session clock, and model-derived cross-chip
+response tables feeding the projection engine."""
+import numpy as np
+import pytest
+from conftest import given, settings, st  # hypothesis, or skip-stubs
+
+from repro.core.governor import sweep_decision
+from repro.core.power_model import GAMMA, W_COMPUTE, W_MEMORY, W_NETWORK
+from repro.core.projection import ResponseTables, builtin_tables
+from repro.power import (ChipModel, EnergyAwarePolicy, EnergySession,
+                         MI250X_GCD, NominalPolicy, PowerCapPolicy,
+                         ProfileArray, StaticFrequencyPolicy, StepProfile,
+                         TPU_V5E, TransferSurface, project,
+                         response_table, validate_against_paper)
+
+CHIP = ChipModel(TPU_V5E)
+SURF = CHIP.surface()
+
+
+def profile_grid(n=120, seed=0):
+    rng = np.random.default_rng(seed)
+    cmn = rng.uniform(1e-4, 3.0, size=(n, 3))
+    cmn[::7, 2] = 0.0                       # no-collective rows
+    return [StepProfile(float(c), float(m), float(x)) for c, m, x in cmn]
+
+
+PROFILES = profile_grid()
+PA = ProfileArray.from_profiles(PROFILES)
+FREQS = (0.4117647058823529, 0.5, 0.7, 0.85, 1.0)
+
+
+# ---------------------------------------------------- scalar/batched parity
+def test_surface_matches_chip_model_per_element():
+    """One (N, F) surface pass == N*F scalar ChipModel calls, bit-for-bit."""
+    fr = np.asarray(FREQS)
+    t = SURF.step_time(PA.expand(), fr)
+    p = SURF.power_w(PA.expand(), fr)
+    e = SURF.energy_j(PA.expand(), fr)
+    assert t.shape == (len(PROFILES), len(FREQS))
+    for i, prof in enumerate(PROFILES):
+        for j, f in enumerate(FREQS):
+            assert t[i, j] == CHIP.step_time(prof, f)
+            assert p[i, j] == CHIP.power_w(prof, f)
+            assert e[i, j] == CHIP.energy_j(prof, f)
+
+
+def test_surface_formulas_pinned_against_golden_reference():
+    """The delegated scalar path still computes the original closed-form
+    model (guards the refactor against silent formula drift)."""
+    spec = TPU_V5E
+    for prof in PROFILES[:25]:
+        for f in (0.5, 1.0):
+            t_ref = max(prof.compute_s / max(f, 1e-6), prof.memory_s,
+                        prof.collective_s, 1e-12)
+            u_c = prof.compute_s / max(f, 1e-6) / t_ref
+            u_m, u_n = prof.memory_s / t_ref, prof.collective_s / t_ref
+            span = spec.tdp_w - spec.idle_w
+            p_ref = min(spec.idle_w + span * (W_COMPUTE * u_c * f ** GAMMA
+                                              + W_MEMORY * u_m
+                                              + W_NETWORK * u_n), spec.tdp_w)
+            assert CHIP.step_time(prof, f) == t_ref
+            # rel 1e-14: numpy's pow differs from python's by ~1 ulp on
+            # some inputs; everything else about the formula is exact
+            assert CHIP.power_w(prof, f) == pytest.approx(p_ref,
+                                                          rel=1e-14, abs=0.0)
+            assert CHIP.energy_j(prof, f) == pytest.approx(p_ref * t_ref,
+                                                           rel=1e-14, abs=0.0)
+
+
+def test_utilizations_and_mode_parity():
+    u_c, u_m, u_n = SURF.utilizations(PA, 0.8)
+    modes = SURF.classify_mode_idx(PA)
+    for i, prof in enumerate(PROFILES):
+        assert (float(u_c[i]), float(u_m[i]), float(u_n[i])) == \
+            CHIP.utilizations(prof, 0.8)
+        assert int(modes[i]) == CHIP.classify_mode(prof).idx
+
+
+def test_freq_for_power_cap_matches_scalar_and_accepts_cap_arrays():
+    caps = (120.0, 150.0, 180.0, 500.0)
+    for cap in caps:
+        batched = SURF.freq_for_power_cap(PA, cap)
+        for i, prof in enumerate(PROFILES):
+            assert batched[i] == CHIP.freq_for_power_cap(prof, cap)
+    # per-profile cap array broadcasts
+    cap_arr = np.linspace(120.0, 200.0, len(PROFILES))
+    batched = SURF.freq_for_power_cap(PA, cap_arr)
+    for i in (0, 17, 63, len(PROFILES) - 1):
+        assert batched[i] == CHIP.freq_for_power_cap(PROFILES[i],
+                                                     float(cap_arr[i]))
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),
+    dict(slowdown_budget=0.112),
+    dict(slowdown_budget=0.3, n_freqs=7),
+    dict(power_cap_w=150.0),
+    dict(slowdown_budget=0.05, n_freqs=21, power_cap_w=180.0),
+])
+def test_sweep_decisions_equals_scalar_loop_bit_for_bit(kw):
+    """Acceptance: the vectorized sweep == a Python loop of sweep_decision,
+    including the grid, the budget filter and the 1e-12 hysteresis."""
+    bd = SURF.sweep_decisions(PA, **kw)
+    assert len(bd) == len(PROFILES)
+    for i, prof in enumerate(PROFILES):
+        assert bd.decision(i) == sweep_decision(prof, CHIP, **kw)
+
+
+@pytest.mark.parametrize("policy", [
+    NominalPolicy(),
+    StaticFrequencyPolicy(freq_mhz=900),
+    PowerCapPolicy(cap_w=150.0),
+    EnergyAwarePolicy(slowdown_budget=0.1),
+    EnergyAwarePolicy(power_cap_w=170.0, n_freqs=21),
+])
+def test_decide_batch_equals_scalar_decide(policy):
+    """Acceptance: decide_batch == loop of decide, bit-for-bit, for every
+    built-in policy (and savings_pct matches the scalar property)."""
+    bd = policy.decide_batch(PROFILES, CHIP)
+    for i, prof in enumerate(PROFILES):
+        d = policy.decide(prof, CHIP)
+        assert bd.decision(i) == d
+        assert float(bd.savings_pct[i]) == d.savings_pct
+
+
+def test_surface_works_for_all_registered_chips():
+    mi = ChipModel(MI250X_GCD)
+    bd = mi.surface().sweep_decisions(PA)
+    for i in (0, 31, 97):
+        assert bd.decision(i) == sweep_decision(PROFILES[i], mi)
+
+
+# ------------------------------------------------------------ monotonicity
+def test_power_nondecreasing_in_frequency_for_compute_bound():
+    """More clock never costs less power on compute-bound work."""
+    compute_bound = ProfileArray.from_profiles(
+        [p for p in PROFILES if p.compute_s >= max(p.memory_s,
+                                                   p.collective_s)])
+    fr = np.linspace(CHIP.f_min_frac, 1.0, 33)
+    p = np.asarray(SURF.power_w(compute_bound.expand(), fr))
+    assert (np.diff(p, axis=1) >= -1e-9).all()
+
+
+def test_freq_for_power_cap_nondecreasing_in_cap():
+    """A looser cap never forces a lower clock."""
+    caps = np.linspace(TPU_V5E.idle_w + 1.0, TPU_V5E.tdp_w + 20.0, 40)
+    f = np.asarray(SURF.freq_for_power_cap(PA.expand(), caps))
+    assert f.shape == (len(PROFILES), caps.size)
+    assert (np.diff(f, axis=1) >= 0.0).all()
+    # and the loosest cap (above TDP) admits nominal frequency everywhere
+    assert f[:, -1] == pytest.approx(1.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(c=st.floats(1e-4, 5.0), m=st.floats(1e-4, 5.0),
+       n=st.floats(0.0, 5.0), budget=st.floats(0.0, 0.4))
+def test_sweep_parity_property(c, m, n, budget):
+    prof = StepProfile(c, m, n)
+    bd = SURF.sweep_decisions(ProfileArray.from_profiles([prof]),
+                              slowdown_budget=budget)
+    assert bd.decision(0) == sweep_decision(prof, CHIP,
+                                            slowdown_budget=budget)
+
+
+# ------------------------------------------------------------- jax backend
+def test_jax_backend_close_to_numpy_and_jittable():
+    import jax
+    import jax.numpy as jnp
+    jsurf = TransferSurface(TPU_V5E, backend="jax")
+    sub = ProfileArray.from_profiles(PROFILES[:32])
+    ref = SURF.sweep_decisions(sub)
+    got = jsurf.sweep_decisions(sub)
+    np.testing.assert_allclose(np.asarray(got.energy_j),
+                               np.asarray(ref.energy_j), rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(got.freq_frac),
+                               np.asarray(ref.freq_frac), rtol=2e-5)
+
+    @jax.jit
+    def jitted(c, m, n):
+        bd = jsurf.sweep_decisions(ProfileArray(c, m, n))
+        return bd.freq_frac, bd.energy_j
+    f_j, e_j = jitted(jnp.asarray(sub.compute_s, jnp.float32),
+                      jnp.asarray(sub.memory_s, jnp.float32),
+                      jnp.asarray(sub.collective_s, jnp.float32))
+    np.testing.assert_allclose(np.asarray(e_j), np.asarray(ref.energy_j),
+                               rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(f_j), np.asarray(ref.freq_frac),
+                               rtol=2e-5)
+
+    # the documented (profiles…, freqs) grid idiom must survive jax.jit:
+    # expand() indexes tracers in place, never via host numpy
+    freqs = jnp.asarray([0.5, 0.75, 1.0], jnp.float32)
+
+    @jax.jit
+    def grid(c, m, n):
+        return jsurf.power_w(ProfileArray(c, m, n).expand(), freqs)
+    p_grid = grid(jnp.asarray(sub.compute_s, jnp.float32),
+                  jnp.asarray(sub.memory_s, jnp.float32),
+                  jnp.asarray(sub.collective_s, jnp.float32))
+    ref_grid = SURF.power_w(sub.expand(), np.asarray([0.5, 0.75, 1.0]))
+    assert p_grid.shape == (32, 3)
+    np.testing.assert_allclose(np.asarray(p_grid), np.asarray(ref_grid),
+                               rtol=2e-5)
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="backend"):
+        TransferSurface(TPU_V5E, backend="torch")
+
+
+# ------------------------------------------------------- session batch path
+def test_observe_many_equals_observe_loop():
+    """observe_many == loop of observe: same telemetry bytes, actuation
+    history, decisions and aggregates."""
+    for policy, knobs in [("energy-aware", dict(slowdown_budget=0.1)),
+                          ("power-cap", dict(cap_w=150.0)),
+                          ("nominal", {})]:
+        a = EnergySession(policy=policy, **knobs)
+        b = EnergySession(policy=policy, **knobs)
+        for i, prof in enumerate(PROFILES[:60]):
+            a.observe(i, prof, wall_s=0.25)
+        bd = b.observe_many(PROFILES[:60], wall_s=[0.25] * 60)
+        assert a.telemetry.to_json() == b.telemetry.to_json()
+        assert list(a.actuator.history) == list(b.actuator.history)
+        assert list(a.decisions) == list(b.decisions)
+        assert a._energy_sum == b._energy_sum
+        assert a.wall_s_total == pytest.approx(b.wall_s_total)
+        assert len(bd) == 60 and b.steps == 60
+
+
+def test_observe_many_continues_step_numbering_and_accepts_total_wall():
+    sess = EnergySession(policy="nominal")
+    sess.observe_many(PROFILES[:5])
+    sess.observe_many(PROFILES[5:8], wall_s=1.5)
+    assert sess.steps == 8
+    assert sess.decisions[-1].freq_mhz == TPU_V5E.f_nominal_mhz
+    assert sess.wall_s_total == pytest.approx(1.5)
+    with pytest.raises(ValueError, match="wall_s"):
+        sess.observe_many(PROFILES[:3], wall_s=[0.1, 0.2])
+
+
+def test_observe_many_scalar_fallback_for_minimal_policies():
+    """A third-party policy with only decide() still works (scalar loop)."""
+    class OnlyDecide:
+        name = "only-decide"
+
+        def decide(self, profile, chip):
+            return NominalPolicy().decide(profile, chip)
+
+    sess = EnergySession(policy=OnlyDecide())
+    bd = sess.observe_many(PROFILES[:7])
+    ref = NominalPolicy().decide_batch(PROFILES[:7], CHIP)
+    assert bd.decisions() == ref.decisions()
+
+
+# ----------------------------------------------- session clock (regression)
+def test_session_clock_monotonic_across_frequency_switches():
+    """Satellite regression: a job whose policy switches frequency mid-job
+    (energy-aware on alternating memory/compute-bound steps) must still
+    yield strictly increasing, correctly spaced sample times."""
+    sess = EnergySession(policy="energy-aware", window_s=1e9)
+    profs = [StepProfile(0.1, 1.0), StepProfile(1.0, 0.1)] * 10
+    ds = [sess.observe(i, p) for i, p in enumerate(profs)]
+    freqs = {d.freq_mhz for d in ds}
+    assert len(freqs) > 1                       # the policy really switched
+    sess.telemetry.flush()
+    w = sess.telemetry.windows[0]
+    # reconstruct expected sample times from the decisions themselves
+    expect_t, clock = [], 0.0
+    for d in ds:
+        expect_t.append(clock)
+        clock += d.time_s
+    assert w.t_start == expect_t[0]
+    assert w.t_end == pytest.approx(expect_t[-1] + ds[-1].time_s)
+    # strictly increasing with exactly the decision spacing (the old
+    # ``step * time_s`` clock went backwards at every switch to a faster
+    # step: 0, 1.0, 0.5*2... not monotone)
+    assert all(b > a for a, b in zip(expect_t, expect_t[1:]))
+    sess2 = EnergySession(policy="energy-aware", window_s=1e9)
+    for i, p in enumerate(profs):
+        sess2.observe(i, p)
+    assert sess2.telemetry.to_json() == sess.telemetry.to_json()
+
+
+def test_session_clock_preserves_window_aggregates():
+    """The clock fix changes sample timestamps, not the aggregates: energy,
+    mean power and sample counts per window are decision-derived."""
+    sess = EnergySession(policy="energy-aware", window_s=1e9)
+    profs = [StepProfile(0.1, 1.0), StepProfile(1.0, 0.1)] * 5
+    ds = [sess.observe(i, p) for i, p in enumerate(profs)]
+    sess.telemetry.flush()
+    w = sess.telemetry.windows[0]
+    assert w.samples == len(profs)
+    assert w.energy_j == pytest.approx(sum(d.energy_j for d in ds))
+    assert w.mean_power_w == pytest.approx(
+        sum(d.energy_j for d in ds) / sum(d.time_s for d in ds))
+
+
+# ------------------------------------------- model-derived response tables
+def test_response_table_structure_and_baseline():
+    rt = response_table("tpu-v5e", kind="freq")
+    assert isinstance(rt, ResponseTables)
+    assert rt.kind == "freq" and rt.source == "model:tpu-v5e"
+    top = max(rt.vai)
+    assert top == TPU_V5E.f_nominal_mhz
+    for col in (rt.vai, rt.mb):
+        assert col[top] == pytest.approx((100.0, 100.0, 100.0))
+        for cap, (p_pct, r_pct, e_pct) in col.items():
+            assert 0.0 < p_pct <= 100.0 + 1e-9
+            assert r_pct >= 100.0 - 1e-9
+    # memory-family runtime is frequency-insensitive, compute-family is not
+    lowest = min(rt.vai)
+    assert rt.mb[lowest][1] == pytest.approx(100.0, abs=0.5)
+    assert rt.vai[lowest][1] > 120.0
+
+
+def test_response_table_power_kind_uses_cap_enforcement():
+    rt = response_table("mi250x-gcd", kind="power")
+    assert rt.kind == "power"
+    assert max(rt.vai) == int(round(MI250X_GCD.tdp_w))
+    # a deep power cap must cut the compute-family's average power hard
+    deep = min(rt.vai)
+    assert rt.vai[deep][0] < 80.0
+
+
+def test_builtin_tables_reproduce_table_v_and_kind_mismatch_raises():
+    """Acceptance: validate_against_paper is untouched by the tables
+    plumbing, and explicit builtin tables give identical projections."""
+    errs = validate_against_paper("freq")
+    assert errs["sav"] < 0.15 and errs["sav0"] < 0.15
+    explicit = project([900], "freq", tables=builtin_tables("freq"))
+    default = project([900], "freq")
+    assert [r.to_dict() for r in explicit] == [r.to_dict() for r in default]
+    with pytest.raises(ValueError, match="kind"):
+        project([300], "power", tables=builtin_tables("freq"))
+
+
+def test_observe_many_accepts_profile_array_without_exploding():
+    """A ProfileArray input reaches decide_batch as-is and records the same
+    telemetry as the StepProfile-list path."""
+    a = EnergySession(policy="energy-aware")
+    b = EnergySession(policy="energy-aware")
+    a.observe_many(PROFILES[:30])
+    bd = b.observe_many(ProfileArray.from_profiles(PROFILES[:30]))
+    assert a.telemetry.to_json() == b.telemetry.to_json()
+    assert list(a.decisions) == list(b.decisions)
+    assert len(bd) == 30
+    # and an empty batch is a no-op, not a crash
+    assert len(b.observe_many([])) == 0
+    assert b.steps == 30
+
+
+def test_response_table_rejects_caps_colliding_after_rounding():
+    with pytest.raises(ValueError, match="collide"):
+        response_table("tpu-v5e", caps=[150.4, 150.2], kind="power")
+    with pytest.raises(ValueError, match="collide"):
+        response_table("tpu-v5e", caps=[900.0, 900], kind="freq")
+
+
+def test_default_caps_from_degenerate_table_raises_clearly():
+    from repro.power.jobs import default_caps
+    one_key = response_table("tpu-v5e", caps=[900], kind="freq")
+    with pytest.raises(ValueError, match="below the uncapped baseline"):
+        default_caps("freq", one_key)
+
+
+def test_cross_chip_projection_end_to_end():
+    """Acceptance: a model-derived table for a non-MI250X chip drives the
+    full fleet pipeline end to end."""
+    from repro.power import FleetAnalysis
+    rt = response_table("tpu-v5e", kind="freq")
+    fleet = FleetAnalysis.synthetic(60_000, seed=3).decompose()
+    caps = sorted((k for k in rt.vai if k < max(rt.vai)), reverse=True)
+    rows = fleet.project(caps, "freq", tables=rt)
+    assert len(rows) == len(caps)
+    assert max(r.savings_pct for r in rows) > 0.0
+    # job-granular path with the same tables
+    jf = FleetAnalysis.synthetic_jobs(150, seed=0)
+    rep = jf.job_report(tables=rt)
+    assert rep.caps == tuple(float(c) for c in caps)   # grid from the table
+    assert rep.total_savings_mwh >= 0.0
+    proj = jf.project_jobs(caps, tables=rt)
+    assert proj.savings_pct.shape == (150, len(caps))
