@@ -31,3 +31,4 @@ examples:
 	$(PYTHON) examples/energy_aware_training.py
 	$(PYTHON) examples/fleet_jobs_case_study.py
 	$(PYTHON) examples/cross_chip_projection.py
+	$(PYTHON) examples/streaming_replay.py

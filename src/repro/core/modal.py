@@ -108,6 +108,40 @@ class BatchModalDecomposition:
             total_energy_mwh=tot, sample_interval_s=self.sample_interval_s)
 
 
+# Segment width of the chunk-associative reduction below. 128 matches
+# numpy's pairwise block size, but any fixed value works — what matters is
+# that BOTH the batch and the streaming side call the same np.sum kernel on
+# identical zero-padded 128-vectors.
+STREAM_SEGMENT = 128
+
+
+def stream_sum(x: np.ndarray, axis: int = -1) -> np.ndarray:
+    """Deterministic *chunk-associative* summation along ``axis``.
+
+    The axis is cut into fixed :data:`STREAM_SEGMENT`-element segments
+    aligned to its start (the last one zero-padded), each segment is
+    reduced with ``np.sum``, and the segment sums combine strictly left to
+    right. Because a streaming consumer that buffers samples into the same
+    aligned segments calls the *same* numpy kernel on the *same* padded
+    128-vectors and folds the results in the same order, its running
+    accumulator reproduces this reduction bit-for-bit over arbitrary shard
+    boundaries — the contract :mod:`repro.power.stream` is built on. Keep
+    every float reduction in this module on this helper or that parity
+    breaks.  (Plain ``np.sum`` over the full axis is NOT chunk-associative:
+    its pairwise tree re-associates when the length changes.)
+    """
+    x = np.asarray(x, dtype=np.float64)
+    x = np.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    nseg = max(-(-n // STREAM_SEGMENT), 1)
+    pad = nseg * STREAM_SEGMENT - n
+    if pad:
+        x = np.concatenate(
+            [x, np.zeros(x.shape[:-1] + (pad,), dtype=x.dtype)], axis=-1)
+    seg = x.reshape(x.shape[:-1] + (nseg, STREAM_SEGMENT)).sum(axis=-1)
+    return np.take(np.cumsum(seg, axis=-1), -1, axis=-1)
+
+
 def decompose_batch(power_w: np.ndarray, sample_interval_s: float = 15.0,
                     chip: ChipSpec = MI250X_GCD,
                     mask: Optional[np.ndarray] = None
@@ -117,7 +151,9 @@ def decompose_batch(power_w: np.ndarray, sample_interval_s: float = 15.0,
     ``mask`` (same shape, bool) marks the valid samples of each row —
     variable-length job traces are right-padded and the padding masked out.
     One classification pass plus one masked reduction per mode; no Python
-    loop over jobs.
+    loop over jobs. Float reductions run through the chunk-associative
+    :func:`stream_sum` so the streaming accumulators in
+    :mod:`repro.power.stream` can match them bit-for-bit from a carry.
     """
     p = np.atleast_2d(np.asarray(power_w, dtype=np.float64))
     modes = classify_power(p, chip)
@@ -131,8 +167,8 @@ def decompose_batch(power_w: np.ndarray, sample_interval_s: float = 15.0,
     for i, m in enumerate(MODES):
         sel = (modes == m.idx) & valid
         hours[:, i] = 100.0 * sel.sum(axis=1) / n
-        energy[:, i] = (p * sel).sum(axis=1) * to_mwh
-    total = (p * valid).sum(axis=1) * to_mwh
+        energy[:, i] = stream_sum(p * sel, axis=1) * to_mwh
+    total = stream_sum(p * valid, axis=1) * to_mwh
     return BatchModalDecomposition(hours, energy, total, sample_interval_s,
                                    n_samples=n_valid)
 
@@ -149,8 +185,22 @@ def decompose(power_w: np.ndarray, sample_interval_s: float = 15.0,
 def power_histogram(power_w: np.ndarray, bins: int = 120,
                     max_w: Optional[float] = None
                     ) -> Tuple[np.ndarray, np.ndarray]:
-    hi = max_w or float(np.max(power_w)) * 1.02 + 1e-9
-    hist, edges = np.histogram(power_w, bins=bins, range=(0.0, hi),
+    """Fleet power histogram (paper Fig. 8): (bin centers, density).
+
+    An empty sample array yields an empty histogram (two size-0 arrays)
+    instead of crashing on ``np.max`` of nothing. With an explicit
+    ``max_w``, samples above it are clipped into the top bin rather than
+    silently dropped — every recorded watt stays accounted for.
+    """
+    p = np.asarray(power_w, dtype=np.float64).ravel()
+    if p.size == 0:
+        return np.empty(0), np.empty(0)
+    if max_w is not None:
+        hi = float(max_w)
+        p = np.minimum(p, hi)            # overflow -> top bin, not dropped
+    else:
+        hi = float(np.max(p)) * 1.02 + 1e-9
+    hist, edges = np.histogram(p, bins=bins, range=(0.0, hi),
                                density=True)
     centers = 0.5 * (edges[:-1] + edges[1:])
     return centers, hist
@@ -161,6 +211,8 @@ def detect_peaks(centers: np.ndarray, hist: np.ndarray,
                  ) -> List[float]:
     """Local maxima of the (smoothed) power histogram — the paper's
     "prevalent zones of operation" in Fig. 8/9."""
+    if len(hist) == 0:
+        return []
     if smooth > 1:
         kernel = np.ones(smooth) / smooth
         h = np.convolve(hist, kernel, mode="same")
@@ -185,15 +237,25 @@ def synth_fleet_powers(n_samples: int, seed: int = 0,
     # per-mode power distributions (means reflect paper Figs. 8/9 peaks)
     params = {1: (120.0, 35.0), 2: (300.0, 55.0), 3: (480.0, 35.0),
               4: (575.0, 10.0)}
+    # per-mode counts round independently, so their sum can drift from
+    # n_samples by a few; pin the total by folding the drift into the
+    # largest mode (deterministic, <= len(hours)/2 samples of shift)
+    ks = {idx: int(round(n_samples * pct / 100.0))
+          for idx, pct in hours.items()}
+    drift = n_samples - sum(ks.values())
+    if drift:
+        largest = max(ks, key=lambda i: (ks[i], -i))
+        ks[largest] = max(ks[largest] + drift, 0)
     out = []
-    for idx, pct in hours.items():
-        k = int(round(n_samples * pct / 100.0))
+    for idx, k in ks.items():
         lo, hi = bounds[idx]
         hi = min(hi, chip.tdp_w * 1.1)
         mu, sd = params[idx]
         x = rng.normal(mu, sd, size=k)
         x = np.clip(x, lo + 1e-3, hi - 1e-3 if np.isfinite(hi) else None)
         out.append(x)
-    powers = np.concatenate(out)
+    powers = np.concatenate(out) if out else np.empty(0)
     rng.shuffle(powers)
+    if powers.size != n_samples:         # degenerate tiny-n clamp fallback
+        powers = np.resize(powers, n_samples)
     return powers

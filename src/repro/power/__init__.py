@@ -27,6 +27,13 @@ jobs      — job-level fleet: :class:`JobTable` (synthetic multi-job workload
             + per-job class assignment and the per-class cap schedule
             (``FleetAnalysis.from_jobs(table).job_report()``); analysis runs
             on the vectorized ``(jobs, samples)`` core in ``repro.core``
+stream    — out-of-core telemetry: :class:`StreamingTelemetry` folds shard
+            iterators (arrays, JSONL, ``TelemetryStore.spill_npz`` files)
+            into incremental accumulators bit-for-bit equal to the batch
+            decomposition (``FleetAnalysis.from_stream``), and
+            :func:`replay` re-runs a recorded trace under any policy/chip
+            with one batched decision pass per chunk — policy x chip
+            counterfactual sweeps at month scale, O(shard) memory
 
 Typical driver:
 
@@ -64,6 +71,10 @@ from repro.power.jobs import (  # noqa: F401
     ClassReport, FleetJobsReport, JOB_CLASSES, JobTable, JobTrace,
     class_cap_report, classify_jobs, synth_job_traces)
 from repro.power.fleet import FleetAnalysis  # noqa: F401
+from repro.power.stream import (  # noqa: F401
+    ReplayReport, SampleShard, StreamingModal, StreamingTelemetry,
+    iter_array, iter_jobs, iter_jsonl, iter_npz, iter_store, replay,
+    write_jsonl)
 
 __all__ = [
     # chip model
@@ -88,4 +99,8 @@ __all__ = [
     "FleetJobsReport", "JOB_CLASSES", "JobTable", "JobTrace",
     "class_cap_report", "classify_jobs", "decompose_batch", "project_batch",
     "synth_job_traces",
+    # streaming ingestion + counterfactual replay
+    "ReplayReport", "SampleShard", "StreamingModal", "StreamingTelemetry",
+    "iter_array", "iter_jobs", "iter_jsonl", "iter_npz", "iter_store",
+    "replay", "write_jsonl",
 ]

@@ -9,7 +9,9 @@ to wire `repro.core.{telemetry,modal,projection}` together by hand;
     rows = FleetAnalysis.from_store(ts).decompose().project([900])
 
 Construct from a live :class:`TelemetryStore`, a raw power-sample array, the
-paper-calibrated synthetic fleet, or — for the paper's job-granular claims —
+paper-calibrated synthetic fleet, an out-of-core telemetry stream via
+:meth:`from_stream` (month-scale traces, O(shard) memory — see
+:mod:`repro.power.stream`), or — for the paper's job-granular claims —
 a :class:`repro.power.jobs.JobTable` via :meth:`from_jobs`, which unlocks
 the vectorized per-job surface (``per_job()`` / ``project_jobs()`` /
 ``job_report()``). Both paths run on the same batched array core
@@ -47,6 +49,9 @@ class FleetAnalysis:
         self.decomposition: Optional[ModalDecomposition] = None
         self.jobs = jobs
         self._job_decomposition: Optional[BatchModalDecomposition] = None
+        # set by attach_stream: analyses built out-of-core never hold the
+        # raw sample array; the streaming accumulators stand in for it
+        self._stream = None
 
     # --------------------------------------------------------- constructors
     @classmethod
@@ -81,6 +86,38 @@ class FleetAnalysis:
                    sample_interval_s=jobs.sample_interval_s, jobs=jobs)
 
     @classmethod
+    def from_stream(cls, stream, chip: ChipSpec = MI250X_GCD,
+                    sample_interval_s: float = 15.0, bins: int = 120,
+                    max_w: Optional[float] = None,
+                    track_jobs: bool = True) -> "FleetAnalysis":
+        """Out-of-core constructor: fold an iterator of sample shards (see
+        :mod:`repro.power.stream` — in-memory chunks, JSONL sample logs,
+        ``TelemetryStore.spill_npz`` files, ``JobTable.to_stream()``)
+        through the incremental accumulators with O(shard) memory. The
+        result's ``decompose``/``project``/``project_jobs``/``job_report``
+        are bit-for-bit what the materialized concatenated trace would
+        give; only the raw ``powers`` array is absent, so the histogram is
+        the streaming one (bins fixed at ingest). ``track_jobs=False``
+        skips the per-job accumulators (halves ingest work) for flat
+        fleet-only analyses."""
+        from repro.power.stream import StreamingTelemetry
+        return StreamingTelemetry(
+            chip=chip, sample_interval_s=sample_interval_s, bins=bins,
+            max_w=max_w, track_jobs=track_jobs).extend(stream).fleet()
+
+    def attach_stream(self, stream) -> "FleetAnalysis":
+        """Back this analysis with finished streaming accumulators (a
+        :class:`repro.power.stream.StreamingTelemetry`) instead of a raw
+        sample array — used by ``StreamingTelemetry.fleet()``. The per-job
+        view comes along only for multi-job streams, matching
+        :meth:`from_store`."""
+        self._stream = stream
+        self.decomposition = stream.decomposition()
+        if len(stream.job_ids()) > 1:
+            self._job_decomposition = stream.per_job()
+        return self
+
+    @classmethod
     def synthetic(cls, n_samples: int, seed: int = 0,
                   hours_pct: Optional[Dict[int, float]] = None,
                   chip: ChipSpec = MI250X_GCD,
@@ -106,17 +143,33 @@ class FleetAnalysis:
     def decompose(self) -> "FleetAnalysis":
         """Modal decomposition (Table IV); chainable — the result is kept on
         ``self.decomposition``."""
+        if self._stream is not None:
+            self.decomposition = self._stream.decomposition()
+            return self
         self.decomposition = decompose(self.powers, self.sample_interval_s,
                                        self.chip)
         return self
 
-    def histogram(self, bins: int = 120,
+    def histogram(self, bins: Optional[int] = None,
                   max_w: Optional[float] = None
                   ) -> Tuple[np.ndarray, np.ndarray]:
-        """Fleet power histogram (paper Fig. 8): (bin centers, density)."""
-        return power_histogram(self.powers, bins=bins, max_w=max_w)
+        """Fleet power histogram (paper Fig. 8): (bin centers, density).
+        ``bins`` defaults to 120 — or, on a streamed analysis, to the bin
+        layout fixed at ingest (explicitly asking for a different one
+        raises: the raw samples are gone)."""
+        if self._stream is not None:
+            if (bins is not None and bins != self._stream.bins) or (
+                    max_w is not None and max_w != self._stream.max_w):
+                raise ValueError(
+                    f"streamed analysis: histogram bins/max_w are fixed at "
+                    f"ingest (bins={self._stream.bins}, "
+                    f"max_w={self._stream.max_w}); re-ingest via "
+                    f"FleetAnalysis.from_stream(..., bins=, max_w=)")
+            return self._stream.histogram()
+        return power_histogram(self.powers, bins=bins if bins is not None
+                               else 120, max_w=max_w)
 
-    def peaks(self, bins: int = 120, smooth: int = 3,
+    def peaks(self, bins: Optional[int] = None, smooth: int = 3,
               min_rel_height: float = 0.08) -> List[float]:
         """Prevalent zones of operation (paper Figs. 8/9): the local maxima
         of the smoothed power histogram, in watts."""
@@ -157,7 +210,8 @@ class FleetAnalysis:
         if self.jobs is None:
             raise ValueError(
                 "no per-job view: construct via FleetAnalysis.from_jobs / "
-                "synthetic_jobs, or a multi-job telemetry store")
+                "synthetic_jobs / from_stream, or a multi-job telemetry "
+                "store")
         return self.jobs
 
     def per_job(self) -> BatchModalDecomposition:
@@ -194,15 +248,17 @@ class FleetAnalysis:
         d = self._decomposition()
         out = {
             "chip": self.chip.name,
-            "samples": int(self.powers.size),
+            "samples": (self._stream.n_samples if self._stream is not None
+                        else int(self.powers.size)),
             "hours_pct": d.hours_pct,
             "energy_pct": d.energy_pct(),
             "total_energy_mwh": d.total_energy_mwh,
             "peaks_w": self.peaks(),
         }
-        if self.jobs is not None:
+        if self.jobs is not None or self._job_decomposition is not None:
             cls = self.job_classes()
-            out["n_jobs"] = len(self.jobs)
+            out["n_jobs"] = (len(self.jobs) if self.jobs is not None
+                             else self._job_decomposition.n_jobs)
             out["job_classes"] = {
                 name: int((cls == i).sum())
                 for i, name in enumerate(jobs_mod.JOB_CLASSES)}

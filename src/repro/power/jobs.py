@@ -142,6 +142,16 @@ class JobTable:
         return decompose_batch(self.powers, self.sample_interval_s,
                                self.chip, mask=self.mask)
 
+    def to_stream(self, samples_per_shard: int = 65536):
+        """This table as a job-ordered telemetry stream of
+        :class:`repro.power.stream.SampleShard` chunks — the hand-off to
+        the O(shard)-memory pipeline (``FleetAnalysis.from_stream``,
+        ``stream.replay``) without re-materializing the matrix."""
+        # function-level import: stream is a sibling submodule (see the
+        # _class_power_ceilings note on package-__init__ cycles)
+        from repro.power.stream import iter_jobs
+        return iter_jobs(self, samples_per_shard)
+
     # ----------------------------------------------------------- ingestion
     @classmethod
     def from_store(cls, store: TelemetryStore,

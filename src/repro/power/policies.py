@@ -20,7 +20,7 @@ from typing import Callable, Dict, Optional, Protocol, Union, runtime_checkable
 
 from repro.core.governor import Decision, sweep_decision
 from repro.core.power_model import ChipModel, StepProfile
-from repro.power.surface import BatchDecision, ProfilesLike
+from repro.power.surface import BatchDecision, ProfileArray, ProfilesLike
 
 
 @runtime_checkable
@@ -138,6 +138,22 @@ class EnergyAwarePolicy:
         return chip.surface().sweep_decisions(
             profiles, slowdown_budget=self.slowdown_budget,
             n_freqs=self.n_freqs, power_cap_w=self.power_cap_w)
+
+
+def decide_batch(policy: PowerPolicy, profiles: ProfilesLike,
+                 chip: ChipModel) -> BatchDecision:
+    """One vectorized decision pass for *any* policy: the built-ins'
+    ``decide_batch`` when implemented, otherwise a scalar ``decide`` loop
+    lifted into a :class:`BatchDecision`. This is the third-party-policy
+    fallback shared by ``EnergySession.observe_many`` and
+    :func:`repro.power.stream.replay` — one batched policy call per chunk,
+    never one per sample, on the built-in policies."""
+    if hasattr(policy, "decide_batch"):
+        return policy.decide_batch(profiles, chip)
+    pa = profiles if isinstance(profiles, ProfileArray) \
+        else ProfileArray.coerce(profiles)
+    return BatchDecision.from_decisions(
+        [policy.decide(pa.profile(i), chip) for i in range(len(pa))])
 
 
 # ---------------------------------------------------------------------------

@@ -24,7 +24,8 @@ from repro.core.governor import PowerActuator, Decision, SimulatedActuator
 from repro.core.hardware import ChipSpec, TPU_V5E
 from repro.core.power_model import ChipModel, StepProfile
 from repro.core.telemetry import StepSample, TelemetryStore
-from repro.power.policies import PolicyLike, PowerPolicy, get_policy
+from repro.power.policies import (PolicyLike, PowerPolicy, decide_batch,
+                                  get_policy)
 from repro.power.surface import BatchDecision, ProfileArray
 
 
@@ -111,16 +112,10 @@ class EnergySession:
         if len(batch) == 0:
             return BatchDecision.from_decisions([])
         start = self.steps if start_step is None else start_step
-        if hasattr(self.policy, "decide_batch"):
-            # a ProfileArray goes to the policy as-is — no exploding it
-            # into scalar StepProfiles just to re-coerce them back
-            bd = self.policy.decide_batch(batch, self.chip)
-            ds = bd.decisions()
-        else:                      # third-party policy: scalar fallback
-            if isinstance(batch, ProfileArray):
-                batch = [batch.profile(i) for i in range(len(batch))]
-            ds = [self.policy.decide(p, self.chip) for p in batch]
-            bd = BatchDecision.from_decisions(ds)
+        # one vectorized policy pass (scalar-loop fallback for third-party
+        # policies lives in policies.decide_batch, shared with stream.replay)
+        bd = decide_batch(self.policy, batch, self.chip)
+        ds = bd.decisions()
         walls: Sequence[Optional[float]]
         if wall_s is None:
             walls = [None] * len(ds)

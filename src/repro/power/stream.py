@@ -1,0 +1,661 @@
+"""Out-of-core telemetry ingestion and counterfactual policy replay.
+
+The paper's headline numbers come from three months of Frontier telemetry —
+a trace that never fits in one in-memory array. Every other analysis path
+in this repo materializes the full trace (`TelemetryStore` deques,
+``FleetAnalysis`` one-shot arrays, ``decompose_batch`` matrices); this
+module is the O(shard)-memory alternative:
+
+* :class:`SampleShard` — one columnar chunk of a telemetry stream, coerced
+  from in-memory arrays, ``StepSample`` lists, JSONL sample logs
+  (:func:`iter_jsonl`) or the ``.npz`` spill files written by
+  :meth:`repro.core.telemetry.TelemetryStore.spill_npz`
+  (:func:`iter_npz`);
+* :class:`StreamingModal` — incremental per-job and fleet per-mode
+  hour/energy accumulators that are **bit-for-bit** equal to
+  :func:`repro.core.modal.decompose_batch` on the concatenated trace, for
+  any shard boundaries (both sides reduce with the chunk-associative
+  segmented fold of :func:`repro.core.modal.stream_sum`);
+* :class:`StreamingTelemetry` — :class:`StreamingModal` plus a streaming
+  power histogram (fixed bin edges, integer counts) behind one
+  ``ingest(shard)`` call; its :meth:`StreamingTelemetry.fleet` hands the
+  finished accumulators to the unchanged ``FleetAnalysis`` modal ->
+  projection pipeline (``FleetAnalysis.from_stream`` is the shorthand);
+* :func:`replay` — re-run a recorded trace under any
+  :class:`~repro.power.policies.PowerPolicy` and any chip: each chunk's
+  power samples are inverted into roofline profiles
+  (:meth:`~repro.power.surface.TransferSurface.infer_profiles`) and pushed
+  through ONE batched ``decide_batch`` call, yielding per-job and fleet
+  energy/runtime deltas — the policy x chip scenario sweep (e.g. an
+  MI250X-measured trace replayed under a TPU-v5e energy-aware policy, with
+  ``tables=response_table("tpu-v5e")`` adding the cap-projection view).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass
+from typing import (Dict, Iterable, Iterator, List, Optional, Sequence,
+                    Tuple, Union)
+
+import numpy as np
+
+from repro.core.hardware import ChipSpec, MI250X_GCD, MODES
+from repro.core.modal import (BatchModalDecomposition, ModalDecomposition,
+                              STREAM_SEGMENT as SEG, classify_power)
+from repro.core.power_model import ChipModel
+from repro.core.projection import ProjectionRow, ResponseTables, \
+    project_from_decomposition
+from repro.core.telemetry import StepSample, TelemetryStore, load_spill
+from repro.power.policies import PolicyLike, decide_batch, get_policy
+
+_N_MODES = len(MODES)
+_MODE_IDXS = np.array([m.idx for m in MODES], dtype=np.int64)
+
+ShardLike = Union["SampleShard", np.ndarray, Sequence[StepSample]]
+
+
+# ---------------------------------------------------------------------------
+# Shards + stream sources
+# ---------------------------------------------------------------------------
+@dataclass
+class SampleShard:
+    """One chunk of a telemetry stream, columnar. ``power_w`` is the only
+    physically required signal; ``duration_s``/``energy_j`` default to the
+    sample interval and ``power * duration``. ``mode`` (recorded structural
+    mode index, 1..4) and ``freq_mhz`` (recorded clock) are optional — when
+    absent, consumers classify by power band / assume nominal clock."""
+
+    power_w: np.ndarray                     # (n,) float64
+    job_id: np.ndarray                      # (n,) unicode
+    duration_s: np.ndarray                  # (n,) float64
+    energy_j: np.ndarray                    # (n,) float64
+    mode: Optional[np.ndarray] = None       # (n,) int, 1..4
+    freq_mhz: Optional[np.ndarray] = None   # (n,) float64
+
+    def __len__(self) -> int:
+        return int(self.power_w.size)
+
+    @classmethod
+    def from_arrays(cls, power_w, job_id: Union[str, np.ndarray] = "job0",
+                    duration_s=None, energy_j=None, mode=None,
+                    freq_mhz=None,
+                    sample_interval_s: float = 15.0) -> "SampleShard":
+        p = np.asarray(power_w, dtype=np.float64).ravel()
+        n = p.size
+        jid = np.asarray(job_id)
+        if jid.ndim == 0:
+            jid = np.broadcast_to(jid, (n,))
+        if duration_s is None:
+            dur = np.full(n, float(sample_interval_s))
+        else:
+            dur = np.asarray(duration_s, dtype=np.float64)
+            dur = np.full(n, float(dur)) if dur.ndim == 0 else dur.ravel()
+        e = None if energy_j is None \
+            else np.asarray(energy_j, dtype=np.float64).ravel()
+        md = None if mode is None \
+            else np.asarray(mode, dtype=np.int64).ravel()
+        fq = None if freq_mhz is None \
+            else np.asarray(freq_mhz, dtype=np.float64).ravel()
+        for name, arr in (("job_id", jid), ("duration_s", dur),
+                          ("energy_j", e), ("mode", md),
+                          ("freq_mhz", fq)):
+            if arr is not None and arr.shape != (n,):
+                raise ValueError(f"shard field {name} has shape "
+                                 f"{arr.shape}, expected ({n},)")
+        return cls(p, jid, dur, e if e is not None else p * dur, md, fq)
+
+    @classmethod
+    def from_samples(cls, samples: Sequence[StepSample]) -> "SampleShard":
+        return cls.from_arrays(
+            [s.power_w for s in samples],
+            job_id=np.array([s.job_id for s in samples], dtype=np.str_),
+            duration_s=[s.duration_s for s in samples],
+            energy_j=[s.energy_j for s in samples],
+            mode=[s.mode for s in samples],
+            freq_mhz=[s.freq_mhz for s in samples])
+
+    @classmethod
+    def coerce(cls, obj: ShardLike,
+               sample_interval_s: float = 15.0) -> "SampleShard":
+        if isinstance(obj, SampleShard):
+            return obj
+        if isinstance(obj, (list, tuple)) and obj \
+                and isinstance(obj[0], StepSample):
+            return cls.from_samples(obj)
+        return cls.from_arrays(obj, sample_interval_s=sample_interval_s)
+
+
+def iter_array(power_w: np.ndarray, chunk: int = 65536,
+               job_id: str = "job0",
+               sample_interval_s: float = 15.0) -> Iterator[SampleShard]:
+    """A flat in-memory power array as a chunked stream (views, no copy)."""
+    p = np.asarray(power_w, dtype=np.float64).ravel()
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    for start in range(0, p.size, chunk):
+        yield SampleShard.from_arrays(p[start:start + chunk], job_id=job_id,
+                                      sample_interval_s=sample_interval_s)
+
+
+def write_jsonl(samples: Iterable[StepSample], path: str,
+                append: bool = False) -> int:
+    """Per-sample log: one ``StepSample`` JSON dict per line — the
+    raw-sample counterpart of the window-level ``.npz`` spill. Overwrites
+    ``path`` unless ``append=True`` (long-running drivers append batches)."""
+    n = 0
+    with open(path, "a" if append else "w") as f:
+        for s in samples:
+            f.write(json.dumps(asdict(s)) + "\n")
+            n += 1
+    return n
+
+
+def iter_jsonl(path: str, chunk: int = 65536) -> Iterator[SampleShard]:
+    """Stream a :func:`write_jsonl` sample log back as shards of ``chunk``
+    samples — only one chunk of parsed samples is alive at a time."""
+    buf: List[StepSample] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            buf.append(StepSample(**json.loads(line)))
+            if len(buf) >= chunk:
+                yield SampleShard.from_samples(buf)
+                buf = []
+    if buf:
+        yield SampleShard.from_samples(buf)
+
+
+def _shard_from_windows(windows) -> SampleShard:
+    """Window-to-sample mapping shared by every window-level source: each
+    aggregated window contributes its mean power as one sample (the same
+    mapping as ``store.powers()``), its true energy, and its summed
+    duration (``energy / mean power``)."""
+    energy = np.array([w.energy_j for w in windows], dtype=np.float64)
+    mean_p = np.array([w.mean_power_w for w in windows], dtype=np.float64)
+    return SampleShard.from_arrays(
+        mean_p,
+        job_id=np.array([w.job_id for w in windows], dtype=np.str_),
+        duration_s=energy / np.maximum(mean_p, 1e-9),
+        energy_j=energy)
+
+
+def iter_store(store: TelemetryStore) -> Iterator[SampleShard]:
+    """A live :class:`TelemetryStore`'s aggregated windows as one shard
+    (see :func:`_shard_from_windows` for the mapping)."""
+    store.flush()
+    ws = list(store.windows)
+    if ws:
+        yield _shard_from_windows(ws)
+
+
+def iter_npz(paths: Union[str, Sequence[str]]) -> Iterator[SampleShard]:
+    """Stream :meth:`TelemetryStore.spill_npz` files, one shard per spill —
+    the out-of-core path: a month-scale run spills periodically, and the
+    analysis never holds more than one spill's windows in memory."""
+    if isinstance(paths, str):
+        paths = [paths]
+    for path in paths:
+        windows, _window_s = load_spill(path)
+        if windows:
+            yield _shard_from_windows(windows)
+
+
+def iter_jobs(table, samples_per_shard: int = 65536
+              ) -> Iterator[SampleShard]:
+    """A :class:`repro.power.jobs.JobTable` as a job-ordered stream;
+    shards pack multiple jobs and split long jobs mid-trace, exactly the
+    boundary conditions the parity suite exercises. (Also reachable as
+    ``table.to_stream()``.)"""
+    if samples_per_shard < 1:
+        raise ValueError(
+            f"samples_per_shard must be >= 1, got {samples_per_shard}")
+    buf_p: List[np.ndarray] = []
+    buf_j: List[np.ndarray] = []
+    n = 0
+    for t in table.traces:
+        start = 0
+        while start < t.powers.size:
+            take = min(samples_per_shard - n, t.powers.size - start)
+            buf_p.append(np.asarray(t.powers[start:start + take],
+                                    dtype=np.float64))
+            # no dtype=: np.full must size the unicode width from the value
+            # (an explicit np.str_ collapses to '<U1' and truncates ids)
+            buf_j.append(np.full(take, t.job_id))
+            n += take
+            start += take
+            if n >= samples_per_shard:
+                yield SampleShard.from_arrays(
+                    np.concatenate(buf_p), job_id=np.concatenate(buf_j),
+                    sample_interval_s=table.sample_interval_s)
+                buf_p, buf_j, n = [], [], 0
+    if n:
+        yield SampleShard.from_arrays(
+            np.concatenate(buf_p), job_id=np.concatenate(buf_j),
+            sample_interval_s=table.sample_interval_s)
+
+
+# ---------------------------------------------------------------------------
+# Streaming modal accumulators
+# ---------------------------------------------------------------------------
+class _ModalAcc:
+    """Per-mode running reductions for one scope (the fleet, or one job).
+
+    Mirrors :func:`repro.core.modal.stream_sum` exactly: raw samples
+    buffer into :data:`STREAM_SEGMENT`-aligned segments (relative to the
+    scope's own start), every completed — or finally zero-padded — segment
+    goes through the same ``np.sum`` kernel on the same 128-vector the
+    batch reduction sees, and segment sums combine strictly left to right.
+    Finalizing therefore reproduces ``decompose_batch``'s energies
+    bit-for-bit for any shard boundaries; ``counts`` are exact integers.
+    """
+
+    __slots__ = ("carry", "counts", "n", "_buf_p", "_buf_m")
+
+    def __init__(self) -> None:
+        # row layout: one fold per mode's masked powers + one for the total
+        self.carry = np.zeros(_N_MODES + 1, dtype=np.float64)
+        self.counts = np.zeros(_N_MODES, dtype=np.int64)
+        self.n = 0
+        self._buf_p = np.empty(0, dtype=np.float64)
+        self._buf_m = np.empty(0, dtype=np.int64)
+
+    @staticmethod
+    def _contrib(p: np.ndarray, modes: np.ndarray) -> np.ndarray:
+        """The same elementwise ``p * (mode == idx)`` contribution rows
+        (plus the all-samples total row) decompose_batch reduces."""
+        c = np.empty((_N_MODES + 1, p.size), dtype=np.float64)
+        c[:_N_MODES] = p[None, :] * (modes[None, :] == _MODE_IDXS[:, None])
+        c[_N_MODES] = p
+        return c
+
+    def fold(self, p: np.ndarray, modes: np.ndarray) -> None:
+        if p.size == 0:
+            return
+        self.counts += np.bincount(modes, minlength=_N_MODES + 1)[1:]
+        self.n += p.size
+        p = np.concatenate([self._buf_p, np.asarray(p, dtype=np.float64)])
+        modes = np.concatenate([self._buf_m, modes])
+        k = (p.size // SEG) * SEG
+        if k:
+            seg = self._contrib(p[:k], modes[:k]) \
+                .reshape(_N_MODES + 1, -1, SEG).sum(axis=-1)
+            block = np.concatenate([self.carry[:, None], seg], axis=1)
+            self.carry = np.cumsum(block, axis=1)[:, -1]
+        self._buf_p, self._buf_m = p[k:].copy(), modes[k:].copy()
+
+    def totals(self) -> np.ndarray:
+        """``(modes + 1,)`` running W-sums, open partial segment included
+        (zero-padded to SEG, the same vector the batch's tail segment
+        reduces). Non-destructive — analysis mid-stream keeps streaming."""
+        if self._buf_p.size == 0:
+            return self.carry
+        pad_p = np.zeros(SEG, dtype=np.float64)
+        pad_p[:self._buf_p.size] = self._buf_p
+        pad_m = np.zeros(SEG, dtype=np.int64)
+        pad_m[:self._buf_m.size] = self._buf_m
+        return self.carry + self._contrib(pad_p, pad_m).sum(axis=-1)
+
+
+class StreamingModal:
+    """Incremental :func:`repro.core.modal.decompose_batch`: fold power
+    samples chunk by chunk and finalize into the same
+    :class:`ModalDecomposition` / :class:`BatchModalDecomposition` the
+    one-shot pipeline produces — bit-for-bit, for any shard boundaries
+    (including shards that split mid-window or mid-job; a job's samples
+    may arrive in any number of separated runs)."""
+
+    def __init__(self, chip: ChipSpec = MI250X_GCD,
+                 sample_interval_s: float = 15.0, track_jobs: bool = True):
+        self.chip = chip if isinstance(chip, ChipSpec) \
+            else ChipModel(chip).spec
+        self.sample_interval_s = float(sample_interval_s)
+        self.track_jobs = track_jobs      # False: fleet scope only (replay's
+        self._fleet = _ModalAcc()         # recorded view skips the per-job
+        self._jobs: Dict[str, _ModalAcc] = {}    # fold it never reads)
+
+    # ------------------------------------------------------------- folding
+    def fold(self, power_w: np.ndarray, job_id: np.ndarray) -> None:
+        p = np.asarray(power_w, dtype=np.float64)
+        if p.size == 0:
+            return
+        modes = classify_power(p, self.chip)
+        self._fleet.fold(p, modes)
+        if not self.track_jobs:
+            return
+        jids = np.asarray(job_id)
+        uniq, first = np.unique(jids, return_index=True)
+        for jid in uniq[np.argsort(first)]:      # first-seen order
+            sel = jids == jid
+            self._jobs.setdefault(str(jid), _ModalAcc()).fold(p[sel],
+                                                              modes[sel])
+
+    # ------------------------------------------------------------ finalize
+    @property
+    def n_samples(self) -> int:
+        return self._fleet.n
+
+    def job_ids(self) -> List[str]:
+        return list(self._jobs)
+
+    def _finalize(self, acc: _ModalAcc
+                  ) -> Tuple[np.ndarray, np.ndarray, float]:
+        # exactly decompose_batch's finalization arithmetic, in its order
+        to_mwh = self.sample_interval_s / 3600.0 / 1e6
+        n = max(acc.n, 1)
+        hours = 100.0 * acc.counts / n
+        sums = acc.totals()
+        return hours, sums[:_N_MODES] * to_mwh, float(sums[_N_MODES]
+                                                      * to_mwh)
+
+    def decomposition(self) -> ModalDecomposition:
+        """Fleet-level result == ``decompose(concatenated_powers)``."""
+        hours, energy, total = self._finalize(self._fleet)
+        return ModalDecomposition(
+            hours_pct={m.idx: float(hours[i]) for i, m in enumerate(MODES)},
+            energy_mwh={m.idx: float(energy[i])
+                        for i, m in enumerate(MODES)},
+            total_energy_mwh=total,
+            sample_interval_s=self.sample_interval_s)
+
+    def per_job(self) -> BatchModalDecomposition:
+        """Per-job result == ``decompose_batch`` over the job-grouped
+        ``(jobs, samples)`` matrix (rows in first-seen job order, matching
+        ``TelemetryStore.powers_by_job`` / ``JobTable.from_store``)."""
+        if not self._jobs:
+            raise ValueError("no samples ingested yet")
+        done = [self._finalize(acc) for acc in self._jobs.values()]
+        return BatchModalDecomposition(
+            hours_pct=np.stack([d[0] for d in done]),
+            energy_mwh=np.stack([d[1] for d in done]),
+            total_energy_mwh=np.array([d[2] for d in done]),
+            sample_interval_s=self.sample_interval_s,
+            n_samples=np.array([acc.n for acc in self._jobs.values()],
+                               dtype=np.int64))
+
+
+class StreamingTelemetry:
+    """Chunked telemetry ingestion with O(shard) memory:
+    :class:`StreamingModal` accumulators plus a streaming fleet power
+    histogram, fed by ``ingest(shard)`` / ``extend(stream)``.
+
+    The histogram's range is fixed at construction (``max_w`` defaults to
+    1.25x the chip's TDP; overflow clips into the top bin, matching
+    :func:`repro.core.modal.power_histogram`), because a streaming pass
+    cannot know the global maximum up front; integer bin counts accumulate
+    exactly, so the finalized density equals the one-shot histogram of the
+    concatenated trace bit-for-bit.
+    """
+
+    def __init__(self, chip: ChipSpec = MI250X_GCD,
+                 sample_interval_s: float = 15.0, bins: int = 120,
+                 max_w: Optional[float] = None, track_jobs: bool = True):
+        self.modal = StreamingModal(chip, sample_interval_s,
+                                    track_jobs=track_jobs)
+        self.chip = self.modal.chip
+        self.sample_interval_s = self.modal.sample_interval_s
+        self.bins = int(bins)
+        self.max_w = float(max_w) if max_w is not None \
+            else float(self.chip.tdp_w) * 1.25
+        self.edges = np.histogram_bin_edges(np.empty(0), bins=self.bins,
+                                            range=(0.0, self.max_w))
+        self._hist = np.zeros(self.bins, dtype=np.int64)
+
+    # ------------------------------------------------------------ ingestion
+    def ingest(self, shard: ShardLike) -> "StreamingTelemetry":
+        sh = SampleShard.coerce(shard, self.sample_interval_s)
+        if len(sh) == 0:
+            return self
+        self.modal.fold(sh.power_w, sh.job_id)
+        self._hist += np.histogram(np.minimum(sh.power_w, self.max_w),
+                                   bins=self.edges)[0]
+        return self
+
+    def extend(self, stream: Iterable[ShardLike]) -> "StreamingTelemetry":
+        for shard in stream:
+            self.ingest(shard)
+        return self
+
+    # ------------------------------------------------------------- analysis
+    @property
+    def n_samples(self) -> int:
+        return self.modal.n_samples
+
+    def job_ids(self) -> List[str]:
+        return self.modal.job_ids()
+
+    def decomposition(self) -> ModalDecomposition:
+        return self.modal.decomposition()
+
+    def per_job(self) -> BatchModalDecomposition:
+        return self.modal.per_job()
+
+    def histogram(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(bin centers, density) == ``power_histogram(concat, bins,
+        max_w)``; empty before any sample arrives."""
+        if self.n_samples == 0:
+            return np.empty(0), np.empty(0)
+        centers = 0.5 * (self.edges[:-1] + self.edges[1:])
+        db = np.diff(self.edges)
+        return centers, self._hist / db / self._hist.sum()
+
+    def fleet(self):
+        """Hand the finished accumulators to the unchanged modal ->
+        projection pipeline: a :class:`repro.power.fleet.FleetAnalysis`
+        whose ``project`` / ``project_jobs`` / ``job_report`` behave as if
+        the concatenated trace had been materialized."""
+        from repro.power.fleet import FleetAnalysis
+        fa = FleetAnalysis(np.empty(0), chip=self.chip,
+                           sample_interval_s=self.sample_interval_s)
+        fa.attach_stream(self)
+        return fa
+
+
+# ---------------------------------------------------------------------------
+# Counterfactual replay
+# ---------------------------------------------------------------------------
+@dataclass
+class ReplayJobRow:
+    """One job's recorded-vs-replayed energy/runtime.
+
+    ``energy_base_j`` is the model's nominal-frequency energy of the same
+    inferred steps — the counterfactual "leave the clocks alone" run.
+    Savings compare against *it* (the session's ``savings_pct`` semantics),
+    so reconstruction bias on samples the power model cannot represent
+    exactly (e.g. low-power latency-mode readings) cancels out instead of
+    polluting the policy delta; ``energy_rec_j`` keeps the recorded truth.
+    """
+    job_id: str
+    n_samples: int
+    energy_rec_j: float
+    energy_base_j: float
+    energy_new_j: float
+    time_rec_s: float
+    time_new_s: float
+
+    @property
+    def savings_pct(self) -> float:
+        return 100.0 * (1.0 - self.energy_new_j
+                        / max(self.energy_base_j, 1e-12))
+
+    @property
+    def dt_pct(self) -> float:
+        return 100.0 * (self.time_new_s / max(self.time_rec_s, 1e-12)
+                        - 1.0)
+
+
+@dataclass
+class ReplayReport:
+    """Fleet + per-job deltas of one counterfactual replay.
+
+    Savings compare the replayed energy against ``energy_base_j``, the
+    model's nominal-frequency run of the same inferred steps (see
+    :class:`ReplayJobRow` for why, and ``model_bias_pct`` for how far that
+    baseline sits from the recorded energy). ``recorded`` is the power-band
+    modal split of the trace as measured (classified against the
+    *recording* chip's envelope); ``replayed`` is the structural modal
+    split of the counterfactual run with its actual model energies.
+    ``projection`` (when response ``tables`` were passed) is the
+    complementary estimate: the recorded energy split pushed through the
+    target chip's Table III-style cap response columns.
+    """
+    policy: str
+    chip: str
+    record_chip: str
+    n_samples: int
+    energy_rec_j: float
+    energy_base_j: float
+    energy_new_j: float
+    time_rec_s: float
+    time_new_s: float
+    jobs: List[ReplayJobRow]
+    recorded: ModalDecomposition
+    replayed: ModalDecomposition
+    projection: Optional[List[ProjectionRow]] = None
+
+    @property
+    def savings_pct(self) -> float:
+        if self.energy_base_j <= 0.0:            # empty stream: no deltas
+            return 0.0
+        return 100.0 * (1.0 - self.energy_new_j / self.energy_base_j)
+
+    @property
+    def dt_pct(self) -> float:
+        if self.time_rec_s <= 0.0:
+            return 0.0
+        return 100.0 * (self.time_new_s / self.time_rec_s - 1.0)
+
+    @property
+    def model_bias_pct(self) -> float:
+        """How far the model's nominal baseline sits from the recorded
+        energy — the honest error bar of a cross-envelope replay (0 for a
+        trace the power model represents exactly)."""
+        if self.energy_rec_j <= 0.0:
+            return 0.0
+        return 100.0 * (self.energy_base_j / self.energy_rec_j - 1.0)
+
+    def by_job(self) -> Dict[str, ReplayJobRow]:
+        return {r.job_id: r for r in self.jobs}
+
+    def project(self, caps: Optional[Sequence[float]] = None,
+                kind: str = "freq",
+                tables: Optional[ResponseTables] = None
+                ) -> List[ProjectionRow]:
+        """Cap-schedule projection of the *recorded* trace (another
+        scenario axis on the same replayed stream — no re-ingestion)."""
+        from repro.power.jobs import default_caps
+        caps = list(caps) if caps is not None else list(
+            default_caps(kind, tables))
+        return project_from_decomposition(self.recorded, caps, kind,
+                                          tables=tables)
+
+    def __str__(self) -> str:
+        lines = [
+            f"replay[{self.policy} @ {self.chip}] of {self.n_samples} "
+            f"samples recorded on {self.record_chip} "
+            f"(model bias {self.model_bias_pct:+.2f}%):",
+            f"  fleet: {self.energy_base_j / 3.6e6:9.3f} kWh -> "
+            f"{self.energy_new_j / 3.6e6:9.3f} kWh "
+            f"({self.savings_pct:+.2f}% saved, dT {self.dt_pct:+.2f}%)",
+        ]
+        for r in self.jobs[:8]:
+            lines.append(
+                f"  {r.job_id:14s} {r.energy_base_j / 3.6e6:9.3f} -> "
+                f"{r.energy_new_j / 3.6e6:9.3f} kWh "
+                f"({r.savings_pct:+.2f}%, dT {r.dt_pct:+.2f}%)")
+        if len(self.jobs) > 8:
+            lines.append(f"  ... {len(self.jobs) - 8} more jobs")
+        return "\n".join(lines)
+
+
+def replay(stream: Iterable[ShardLike], policy: PolicyLike,
+           chip=MI250X_GCD, *, record_chip=None,
+           tables: Optional[ResponseTables] = None,
+           caps: Optional[Sequence[float]] = None, kind: str = "freq",
+           sample_interval_s: float = 15.0, **policy_knobs
+           ) -> ReplayReport:
+    """Re-run a recorded telemetry stream under ``policy`` on ``chip``.
+
+    Per chunk (never per sample): classify/accept the recorded modes,
+    invert the recording chip's power model into roofline profiles
+    (:meth:`TransferSurface.infer_profiles`), and evaluate the policy with
+    ONE batched ``decide_batch`` call; per-job and fleet recorded-vs-
+    replayed energy/runtime accumulate with O(chunk) memory. ``record_chip``
+    defaults to ``chip`` (same-chip what-if); pass the chip the trace was
+    measured on for cross-chip replays. ``tables`` (+ optional ``caps`` /
+    ``kind``) additionally projects the recorded energy split through a
+    response-table surface (:func:`repro.power.response_table`), giving the
+    policy x chip scenario sweep a second, measurement-anchored estimate.
+    """
+    model = ChipModel(chip)
+    rec_model = ChipModel(record_chip) if record_chip is not None else model
+    surf_rec = rec_model.surface()
+    pol = get_policy(policy, **policy_knobs)
+    rec_acc = StreamingModal(rec_model.spec, sample_interval_s,
+                             track_jobs=False)
+
+    e_rec = e_base = e_new = t_rec = t_new = 0.0
+    n = 0
+    mode_e = np.zeros(_N_MODES)
+    mode_t = np.zeros(_N_MODES)
+    per_job: Dict[str, np.ndarray] = {}
+    job_n: Dict[str, int] = {}
+
+    for shard in stream:
+        sh = SampleShard.coerce(shard, sample_interval_s)
+        if len(sh) == 0:
+            continue
+        rec_acc.fold(sh.power_w, sh.job_id)
+        modes = sh.mode if sh.mode is not None \
+            else classify_power(sh.power_w, rec_model.spec)
+        f = 1.0 if sh.freq_mhz is None else np.clip(
+            sh.freq_mhz / rec_model.spec.f_nominal_mhz,
+            rec_model.f_min_frac, 1.0)
+        profiles = surf_rec.infer_profiles(
+            sh.power_w, freq_frac=f, duration_s=sh.duration_s,
+            mode_idx=modes)
+        bd = decide_batch(pol, profiles, model)
+        be = np.asarray(bd.energy_j)
+        bb = np.asarray(bd.baseline_energy_j)
+        bt = np.asarray(bd.time_s)
+        bm = np.asarray(bd.mode_idx)
+
+        e_rec += float(np.sum(sh.energy_j))
+        e_base += float(np.sum(bb))
+        e_new += float(np.sum(be))
+        t_rec += float(np.sum(sh.duration_s))
+        t_new += float(np.sum(bt))
+        n += len(sh)
+        for i in range(_N_MODES):
+            sel = bm == _MODE_IDXS[i]
+            mode_e[i] += float(np.sum(be[sel]))
+            mode_t[i] += float(np.sum(bt[sel]))
+        jids = sh.job_id
+        uniq, first = np.unique(jids, return_index=True)
+        for jid in uniq[np.argsort(first)]:
+            sel = jids == jid
+            row = per_job.setdefault(str(jid), np.zeros(5))
+            row += [np.sum(sh.energy_j[sel]), np.sum(bb[sel]),
+                    np.sum(be[sel]), np.sum(sh.duration_s[sel]),
+                    np.sum(bt[sel])]
+            job_n[str(jid)] = job_n.get(str(jid), 0) + int(sel.sum())
+
+    replayed = ModalDecomposition(
+        hours_pct={m.idx: float(100.0 * mode_t[i] / max(t_new, 1e-12))
+                   for i, m in enumerate(MODES)},
+        energy_mwh={m.idx: float(mode_e[i] / 3.6e9)
+                    for i, m in enumerate(MODES)},
+        total_energy_mwh=e_new / 3.6e9,
+        sample_interval_s=sample_interval_s)
+    report = ReplayReport(
+        policy=pol.name, chip=model.spec.name,
+        record_chip=rec_model.spec.name, n_samples=n,
+        energy_rec_j=e_rec, energy_base_j=e_base, energy_new_j=e_new,
+        time_rec_s=t_rec, time_new_s=t_new,
+        jobs=[ReplayJobRow(jid, job_n[jid], *map(float, row))
+              for jid, row in per_job.items()],
+        recorded=rec_acc.decomposition(), replayed=replayed)
+    if tables is not None or caps is not None:
+        report.projection = report.project(caps, kind, tables)
+    return report

@@ -272,6 +272,55 @@ class TransferSurface:
         return xp.where(u_n >= xp.maximum(u_c, u_m), 1,
                         xp.where(u_m >= u_c, 2, 3))
 
+    # ----------------------------------------------------------- inversion
+    def infer_profiles(self, power_w, freq_frac=1.0, duration_s=1.0,
+                       mode_idx=None) -> ProfileArray:
+        """Invert the power model: a canonical roofline profile per recorded
+        power sample — the entry point of counterfactual replay
+        (:func:`repro.power.stream.replay`).
+
+        One power reading cannot pin down three utilizations, so the
+        recorded (or power-band-classified) ``mode_idx`` names the
+        saturated resource — mode 2 pins HBM at busy fraction 1, modes 3/4
+        pin the MXU, mode 1 the interconnect — and the residual dynamic
+        power is attributed down the chain (network -> memory -> compute),
+        clipped to physical ``[0, 1]`` busy fractions. The inversion is
+        exact where it can be: ``power_w(infer_profiles(p, f, d, m), f)``
+        round-trips ``p`` to float rounding whenever ``p`` lies inside the
+        mode's representable band (no TDP clip, residuals within the
+        weights), and ``step_time(..., f) == duration_s`` always, so a
+        nominal-policy replay reproduces the recorded trace.
+
+        All of ``power_w`` / ``freq_frac`` / ``duration_s`` broadcast
+        together; ``mode_idx`` defaults to the paper's power-band
+        classification against this chip's envelope.
+        """
+        xp = self.xp
+        spec = self.spec
+        dtype = np.float64 if xp is np else None
+        p = xp.asarray(power_w, dtype=dtype)
+        f = xp.maximum(xp.asarray(freq_frac, dtype=dtype), 1e-6)
+        dur = xp.asarray(duration_s, dtype=dtype)
+        if mode_idx is None:
+            from repro.core.modal import classify_power
+            mode_idx = classify_power(np.asarray(p), spec)
+        m = xp.asarray(mode_idx)
+        span = spec.tdp_w - spec.idle_w
+        u = xp.clip((p - spec.idle_w) / span, 0.0, None)
+        wc = W_COMPUTE * self._pow_gamma(f)
+        is_cmp = m >= 3                        # boost replays as compute
+        u_n = xp.where(m == 1, 1.0, 0.0)
+        u_m = xp.where(m == 2, 1.0,
+                       xp.clip((u - W_NETWORK * u_n) / W_MEMORY, 0.0, 1.0))
+        u_m = xp.where(is_cmp, xp.clip((u - wc) / W_MEMORY, 0.0, 1.0), u_m)
+        u_c = xp.where(is_cmp, 1.0,
+                       xp.clip((u - W_NETWORK * u_n - W_MEMORY * u_m) / wc,
+                               0.0, 1.0))
+        # seconds at nominal: the saturated resource binds the step at the
+        # recorded frequency, so step_time(profile, f) == duration_s
+        return ProfileArray(compute_s=u_c * f * dur, memory_s=u_m * dur,
+                            collective_s=u_n * dur)
+
     # ------------------------------------------------------------- capping
     def freq_for_power_cap(self, profiles: ProfilesLike, cap_w,
                            grid: int = 64):

@@ -41,6 +41,46 @@ def test_energy_decomposition_consistency():
     assert abs(sum(d.energy_mwh.values()) - d.total_energy_mwh) < 1e-9
 
 
+# --------------------------------------------- satellite bugfix pins
+@pytest.mark.parametrize("n", [1, 7, 97, 10_001, 123_456])
+def test_synth_fleet_powers_exact_length(n):
+    """Regression: per-mode rounding used to drift the returned length
+    away from n_samples."""
+    assert synth_fleet_powers(n, seed=0).size == n
+
+
+def test_synth_fleet_powers_exact_length_custom_split():
+    p = synth_fleet_powers(10_000, seed=1,
+                           hours_pct={1: 33.3, 2: 33.3, 3: 33.4})
+    assert p.size == 10_000
+    d = decompose(p)
+    assert d.hours_pct[4] == 0.0
+
+
+def test_power_histogram_empty_input():
+    """Regression: np.max of an empty power array used to crash."""
+    centers, hist = power_histogram(np.empty(0))
+    assert centers.size == 0 and hist.size == 0
+    assert detect_peaks(centers, hist) == []
+
+
+def test_power_histogram_overflow_clips_into_top_bin():
+    """Regression: samples above an explicit max_w were silently dropped
+    from the density; they must be counted in the top bin."""
+    centers, hist = power_histogram(np.array([100.0, 700.0]), bins=10,
+                                    max_w=600.0)
+    assert hist[-1] > 0.0                        # the 700 W sample
+    assert hist[1] > 0.0                         # the 100 W sample
+    widths = np.diff(np.linspace(0.0, 600.0, 11))
+    # both samples integrate into the density (half the mass each)
+    assert float(hist[-1] * widths[-1]) == pytest.approx(0.5)
+    # without max_w the range stretches instead, nothing dropped either
+    c2, h2 = power_histogram(np.array([100.0, 700.0]), bins=10)
+    assert float((h2 * np.diff(np.linspace(0, c2[-1] + (c2[1] - c2[0]) / 2,
+                                           11))).sum()) \
+        == pytest.approx(1.0)
+
+
 # ---------------------------------------------------------------- governor
 profiles = st.builds(pm.StepProfile,
                      compute_s=st.floats(1e-4, 5.0),

@@ -1,0 +1,352 @@
+"""Streaming-vs-batch parity suite + counterfactual replay.
+
+The contract under test (ISSUE 4 tentpole): the incremental accumulators in
+``repro.power.stream`` must equal the one-shot batch pipeline **bit-for-bit**
+on the concatenated trace for *any* shard boundaries (mid-window, mid-job),
+and ``replay`` must reproduce an in-memory ``EnergySession.observe_many``
+run to float tolerance.
+"""
+import numpy as np
+import pytest
+
+from repro.core.hardware import MI250X_GCD, TPU_V5E
+from repro.core.modal import (decompose, power_histogram,
+                              synth_fleet_powers)
+from repro.core.power_model import StepProfile
+from repro.core.telemetry import StepSample, TelemetryStore
+from repro.power import (ChipModel, EnergySession, FleetAnalysis, JobTable,
+                         NominalPolicy, StreamingTelemetry, response_table)
+from repro.power.jobs import JobTrace
+from repro.power.policies import decide_batch
+from repro.power.stream import (SampleShard, iter_array, iter_jsonl,
+                                iter_npz, iter_store, replay, write_jsonl)
+
+
+def _random_trace(n=30_000, n_jobs=10, seed=0):
+    """A fleet trace with job runs that revisit earlier job ids (so a job's
+    samples arrive in several separated runs)."""
+    rng = np.random.default_rng(seed)
+    powers = synth_fleet_powers(n, seed=seed + 1)
+    jids = np.empty(n, dtype="<U8")
+    pos = 0
+    while pos < n:
+        run = int(rng.integers(40, 700))
+        jids[pos:pos + run] = f"job{int(rng.integers(n_jobs)):03d}"
+        pos += run
+    return powers, jids
+
+
+def _random_shards(powers, jids, rng, n_cuts=29):
+    """Split a trace at random boundaries — guaranteed to cut mid-window
+    and mid-job somewhere at this density."""
+    cuts = np.sort(rng.choice(np.arange(1, powers.size), size=n_cuts,
+                              replace=False))
+    prev = 0
+    for c in list(cuts) + [powers.size]:
+        yield SampleShard.from_arrays(powers[prev:c], job_id=jids[prev:c])
+        prev = c
+
+
+# ---------------------------------------------------------------- parity
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fleet_accumulators_bitexact_on_random_shards(seed):
+    powers, jids = _random_trace(seed=seed)
+    st = StreamingTelemetry(chip=MI250X_GCD, sample_interval_s=15.0)
+    st.extend(_random_shards(powers, jids, np.random.default_rng(seed)))
+    ref = decompose(powers, 15.0, MI250X_GCD)
+    got = st.decomposition()
+    assert got.hours_pct == ref.hours_pct           # bit-for-bit dicts
+    assert got.energy_mwh == ref.energy_mwh
+    assert got.total_energy_mwh == ref.total_energy_mwh
+    assert st.n_samples == powers.size
+
+
+def test_per_job_accumulators_bitexact_vs_decompose_batch():
+    powers, jids = _random_trace(seed=3)
+    st = StreamingTelemetry(chip=MI250X_GCD, sample_interval_s=15.0)
+    st.extend(_random_shards(powers, jids, np.random.default_rng(3)))
+    # reference: first-seen job grouping (powers_by_job semantics) through
+    # the padded-matrix batch engine
+    order = list(dict.fromkeys(jids))
+    table = JobTable([JobTrace(job_id=j, powers=powers[jids == j])
+                      for j in order], chip=MI250X_GCD)
+    ref = table.decompose()
+    got = st.per_job()
+    assert st.job_ids() == order
+    np.testing.assert_array_equal(got.hours_pct, ref.hours_pct)
+    np.testing.assert_array_equal(got.energy_mwh, ref.energy_mwh)
+    np.testing.assert_array_equal(got.total_energy_mwh,
+                                  ref.total_energy_mwh)
+    np.testing.assert_array_equal(got.n_samples, ref.n_samples)
+
+
+def test_streaming_histogram_bitexact():
+    powers, jids = _random_trace(seed=4)
+    st = StreamingTelemetry(chip=MI250X_GCD)
+    st.extend(_random_shards(powers, jids, np.random.default_rng(4)))
+    c_ref, h_ref = power_histogram(powers, bins=st.bins, max_w=st.max_w)
+    c_got, h_got = st.histogram()
+    np.testing.assert_array_equal(c_got, c_ref)
+    np.testing.assert_array_equal(h_got, h_ref)
+
+
+def test_from_stream_projection_matches_in_memory():
+    powers = synth_fleet_powers(40_000, seed=5)
+    fa = FleetAnalysis.from_stream(iter_array(powers, chunk=4096))
+    fb = FleetAnalysis.from_powers(powers).decompose()
+    for ra, rb in zip(fa.project([1100, 900]), fb.project([1100, 900])):
+        assert ra.to_dict() == rb.to_dict()
+    # chaining .decompose() on a streamed analysis must be a no-op refresh,
+    # not a recompute over the (absent) raw array
+    assert fa.decompose().decomposition.total_energy_mwh \
+        == fb.decomposition.total_energy_mwh
+    # single-job stream: no per-job view (from_store semantics); the
+    # fleet-only fast path lands on the same numbers
+    assert "n_jobs" not in fa.summary()
+    fc = FleetAnalysis.from_stream(iter_array(powers, chunk=4096),
+                                   track_jobs=False)
+    assert fc.decompose().decomposition.energy_mwh \
+        == fb.decomposition.energy_mwh
+
+
+def test_from_stream_job_report_matches_from_jobs():
+    table = JobTable.synthetic(80, seed=6)
+    fa = FleetAnalysis.from_stream(table.to_stream(samples_per_shard=777))
+    fb = FleetAnalysis.from_jobs(table)
+    ra = fa.job_report()
+    rb = fb.job_report()
+    assert ra.to_dict() == rb.to_dict()
+    np.testing.assert_array_equal(fa.job_classes(), fb.job_classes())
+    pa, pb = fa.project_jobs([900]), fb.project_jobs([900])
+    np.testing.assert_array_equal(pa.savings_pct, pb.savings_pct)
+
+
+def test_streamed_histogram_bins_fixed_at_ingest():
+    fa = FleetAnalysis.from_stream(
+        iter_array(synth_fleet_powers(2_000, seed=7), chunk=512))
+    centers, hist = fa.histogram()                   # ingest-time layout
+    assert centers.size == 120
+    with pytest.raises(ValueError, match="fixed at ingest"):
+        fa.histogram(bins=64)
+    assert len(fa.summary()["peaks_w"]) >= 1
+
+
+def test_streamed_custom_bins_keep_peaks_and_summary_working():
+    """Regression: peaks()/summary() used to hardcode bins=120 and raise
+    on any stream ingested with a non-default histogram layout."""
+    fa = FleetAnalysis.from_stream(
+        iter_array(synth_fleet_powers(2_000, seed=7), chunk=512), bins=60)
+    centers, _ = fa.histogram()
+    assert centers.size == 60
+    assert len(fa.peaks()) >= 1                      # no ValueError
+    assert fa.summary()["samples"] == 2_000
+
+
+def test_replay_empty_stream_reports_zero_deltas():
+    """Regression: an empty stream used to report +100% savings / -100%
+    dT (0/0 through the epsilon guards)."""
+    rep = replay([], "energy-aware", chip=TPU_V5E)
+    assert rep.n_samples == 0
+    assert rep.savings_pct == 0.0
+    assert rep.dt_pct == 0.0
+    assert rep.model_bias_pct == 0.0
+    assert rep.jobs == []
+
+
+# ------------------------------------------------------------- sources
+def test_npz_spill_stream_matches_store_pipeline(tmp_path):
+    """Spill-to-npz mid-run and stream the spills back: same decomposition
+    as the never-spilled store's powers()."""
+    powers, _ = _random_trace(n=3_000, seed=8)
+    spilling = TelemetryStore(window_s=15.0)
+    reference = TelemetryStore(window_s=15.0)
+    paths, t = [], 0.0
+    for k, jid in enumerate(["a", "b", "a", "c"]):
+        for i in range(700):
+            s = StepSample(i, t, 1.0, float(powers[k * 700 + i]),
+                           float(powers[k * 700 + i]), 2, 1700, job_id=jid)
+            spilling.record(s)
+            reference.record(s)
+            t += 1.0
+        p = str(tmp_path / f"spill{k}.npz")
+        assert spilling.spill_npz(p) > 0
+        assert len(spilling.windows) == 0            # spill drops windows
+        paths.append(p)
+    st = StreamingTelemetry(chip=MI250X_GCD, sample_interval_s=15.0)
+    st.extend(iter_npz(paths))
+    ref = decompose(reference.powers(), 15.0, MI250X_GCD)
+    got = st.decomposition()
+    assert got.energy_mwh == ref.energy_mwh
+    assert got.total_energy_mwh == ref.total_energy_mwh
+    assert st.job_ids() == reference.job_ids()
+
+
+def test_iter_store_matches_from_store():
+    ts = TelemetryStore(window_s=15.0)
+    t = 0.0
+    for i in range(200):
+        ts.record(StepSample(i, t, 1.0, 250.0 + i, 250.0 + i, 2, 1700,
+                             job_id="a" if i < 90 else "b"))
+        t += 1.0
+    fa = FleetAnalysis.from_stream(iter_store(ts), sample_interval_s=15.0)
+    fb = FleetAnalysis.from_store(ts)
+    assert fa.decompose().decomposition.energy_mwh \
+        == fb.decompose().decomposition.energy_mwh
+
+
+def test_jsonl_roundtrip(tmp_path):
+    powers = synth_fleet_powers(1_500, seed=9)
+    samples = [StepSample(i, float(i), 1.0, float(p), float(p), 2, 1700,
+                          job_id=f"j{i % 3}")
+               for i, p in enumerate(powers)]
+    path = str(tmp_path / "log.jsonl")
+    assert write_jsonl(samples, path) == len(samples)
+    st = StreamingTelemetry(chip=MI250X_GCD, sample_interval_s=15.0)
+    st.extend(iter_jsonl(path, chunk=331))           # splits mid-everything
+    ref = decompose(powers, 15.0, MI250X_GCD)
+    assert st.decomposition().energy_mwh == ref.energy_mwh
+    assert st.job_ids() == ["j0", "j1", "j2"]
+
+
+def test_shard_validation():
+    with pytest.raises(ValueError, match="duration_s"):
+        SampleShard.from_arrays([1.0, 2.0], duration_s=[1.0, 2.0, 3.0])
+    assert len(SampleShard.from_arrays(np.empty(0))) == 0
+
+
+# ------------------------------------------------------------- inversion
+def test_infer_profiles_roundtrip():
+    """power_w(infer_profiles(p, f, d, m), f) == p and step_time == d for
+    in-band samples, at nominal and capped clocks."""
+    surf = ChipModel(TPU_V5E).surface()
+    rng = np.random.default_rng(10)
+    T = rng.uniform(0.5, 2.0, size=64)
+    r = rng.uniform(0.05, 0.4, size=64)
+    profiles = [StepProfile(compute_s=t, memory_s=x * t) if i % 2 == 0
+                else StepProfile(compute_s=x * t, memory_s=t)
+                for i, (t, x) in enumerate(zip(T, r))]
+    for f in (1.0, 0.7):
+        bd = NominalPolicy().decide_batch(profiles, ChipModel(TPU_V5E)) \
+            if f == 1.0 else surf.decisions_at(profiles, f)
+        inferred = surf.infer_profiles(
+            np.asarray(bd.power_w), freq_frac=f,
+            duration_s=np.asarray(bd.time_s),
+            mode_idx=np.asarray(bd.mode_idx))
+        np.testing.assert_allclose(
+            np.asarray(surf.power_w(inferred, f)),
+            np.asarray(bd.power_w), rtol=1e-12)
+        np.testing.assert_allclose(
+            np.asarray(surf.step_time(inferred, f)),
+            np.asarray(bd.time_s), rtol=1e-12)
+
+
+# --------------------------------------------------------------- replay
+def _recorded_nominal(profiles, chip, jids):
+    bd0 = NominalPolicy().decide_batch(profiles, chip)
+    return SampleShard.from_arrays(
+        np.asarray(bd0.power_w), job_id=jids,
+        duration_s=np.asarray(bd0.time_s),
+        energy_j=np.asarray(bd0.energy_j),
+        mode=np.asarray(bd0.mode_idx),
+        freq_mhz=np.asarray(bd0.freq_mhz))
+
+
+def _split(shard, sizes):
+    prev = 0
+    for k in sizes:
+        yield SampleShard.from_arrays(
+            shard.power_w[prev:prev + k], job_id=shard.job_id[prev:prev + k],
+            duration_s=shard.duration_s[prev:prev + k],
+            energy_j=shard.energy_j[prev:prev + k],
+            mode=shard.mode[prev:prev + k],
+            freq_mhz=shard.freq_mhz[prev:prev + k])
+        prev += k
+
+
+@pytest.mark.parametrize("policy,knobs", [
+    ("energy-aware", {}),
+    ("energy-aware", {"slowdown_budget": 0.1}),
+    ("power-cap", {"cap_w": 150.0}),
+    ("static", {"freq_mhz": 1100}),
+])
+def test_replay_matches_observe_many(policy, knobs):
+    """The satellite parity contract: replaying a recorded nominal trace
+    under a policy == running the same steps through an in-memory
+    EnergySession.observe_many, to 1e-9."""
+    rng = np.random.default_rng(11)
+    n = 400
+    profiles = []
+    for i in range(n):
+        T = float(rng.uniform(0.5, 2.0))
+        r = float(rng.uniform(0.05, 0.4))
+        profiles.append(StepProfile(compute_s=T, memory_s=r * T)
+                        if i % 2 else StepProfile(compute_s=r * T,
+                                                  memory_s=T))
+    chip = ChipModel(TPU_V5E)
+    sess = EnergySession(policy=policy, chip=TPU_V5E, **knobs)
+    sess.observe_many(profiles)
+
+    jids = np.array(["a"] * (n // 2) + ["b"] * (n - n // 2))
+    rec = _recorded_nominal(profiles, chip, jids)
+    rep = replay(_split(rec, [137, 1, 200, n - 338]), policy,
+                 chip=TPU_V5E, **knobs)
+    assert rep.savings_pct == pytest.approx(sess.savings_pct(), abs=1e-9)
+    assert rep.energy_new_j == pytest.approx(sess._energy_sum, rel=1e-9)
+    assert rep.energy_rec_j == pytest.approx(sess._baseline_energy_sum,
+                                             rel=1e-9)
+    assert rep.n_samples == n
+    # per-job split is consistent with the fleet aggregate
+    assert sum(r.energy_new_j for r in rep.jobs) \
+        == pytest.approx(rep.energy_new_j, rel=1e-12)
+    assert {r.job_id for r in rep.jobs} == {"a", "b"}
+
+
+def test_replay_nominal_is_identity():
+    rng = np.random.default_rng(12)
+    profiles = [StepProfile(compute_s=float(t), memory_s=float(0.3 * t))
+                for t in rng.uniform(0.5, 2.0, size=100)]
+    chip = ChipModel(TPU_V5E)
+    rec = _recorded_nominal(profiles, chip, np.array(["j"] * 100))
+    rep = replay(_split(rec, [33, 33, 34]), "nominal", chip=TPU_V5E)
+    assert rep.savings_pct == pytest.approx(0.0, abs=1e-9)
+    assert rep.dt_pct == pytest.approx(0.0, abs=1e-9)
+
+
+def test_replay_cross_chip_with_tables():
+    """MI250X-measured trace replayed under a TPU-v5e energy-aware policy,
+    with the model-derived response-table projection alongside."""
+    powers = synth_fleet_powers(10_000, seed=13)
+    tables = response_table("tpu-v5e", kind="freq")
+    rep = replay(iter_array(powers, chunk=2048), "energy-aware",
+                 chip="tpu-v5e", record_chip=MI250X_GCD, tables=tables)
+    assert rep.record_chip == "mi250x-gcd" and rep.chip == "tpu-v5e"
+    assert np.isfinite(rep.savings_pct)
+    assert rep.projection is not None and len(rep.projection) >= 1
+    # the recorded decomposition is the measured trace's modal split
+    ref = decompose(powers, 15.0, MI250X_GCD)
+    assert rep.recorded.energy_mwh == ref.energy_mwh
+    # report renders and a later projection sweep reuses the accumulators
+    assert "replay[energy-aware @ tpu-v5e]" in str(rep)
+    rows = rep.project([900], kind="freq", tables=tables)
+    assert rows[0].cap == 900
+
+
+def test_replay_third_party_policy_scalar_fallback():
+    """A policy without decide_batch goes through the shared scalar-loop
+    lift and must equal the built-in it mirrors."""
+    class MirrorNominal:
+        name = "mirror"
+
+        def decide(self, profile, chip):
+            return NominalPolicy().decide(profile, chip)
+
+    profiles = [StepProfile(compute_s=1.0, memory_s=0.2),
+                StepProfile(compute_s=0.1, memory_s=1.0)]
+    chip = ChipModel(TPU_V5E)
+    got = decide_batch(MirrorNominal(), profiles, chip)
+    ref = NominalPolicy().decide_batch(profiles, chip)
+    np.testing.assert_allclose(np.asarray(got.energy_j),
+                               np.asarray(ref.energy_j), rtol=0)
+    rec = _recorded_nominal(profiles, chip, np.array(["j", "j"]))
+    rep = replay([rec], MirrorNominal(), chip=TPU_V5E)
+    assert rep.savings_pct == pytest.approx(0.0, abs=1e-9)

@@ -62,6 +62,68 @@ def test_sub_window_samples_aggregate_into_one():
     assert ts.windows[0].samples == 14
 
 
+# ------------------------------------------ flush mid-run (regression)
+def test_analysis_flush_does_not_split_next_window():
+    """Regression: analysis methods flush mid-run; the stale _window_start
+    they used to leave behind made the next record() close a premature
+    one-sample window as soon as its timestamp sat window_s past the *old*
+    window's start. Interleave record/powers/record and require the
+    post-flush samples to aggregate normally."""
+    ts = TelemetryStore(window_s=15.0)
+    for i in range(5):
+        ts.record(_sample(i, t=float(i)))
+    assert ts.powers().size == 1                 # flushes the open window
+    # resume recording well past the old window start: these two samples
+    # are 1 s apart and must land in ONE fresh window, not split 1+1
+    ts.record(_sample(5, t=20.0))
+    ts.record(_sample(6, t=21.0))
+    ts.flush()
+    assert [w.samples for w in ts.windows] == [5, 2]
+    assert ts.windows[1].t_start == 20.0
+
+
+def test_interleaved_analysis_calls_keep_totals():
+    ts = TelemetryStore(window_s=15.0)
+    total = 0.0
+    for i in range(40):
+        ts.record(_sample(i, t=float(i) * 2.0, power=100.0 + i))
+        total += 100.0 + i
+        if i % 7 == 0:                           # analysis mid-stream
+            assert ts.total_energy_j() == pytest.approx(total)
+    assert ts.total_energy_j() == pytest.approx(total)
+    assert sum(w.samples for w in ts.windows) == 40
+
+
+# ------------------------------------------------------------ npz spill
+def test_spill_npz_roundtrip_and_clear(tmp_path):
+    ts = TelemetryStore(window_s=10.0)
+    t = 0.0
+    for jid in ("x", "y"):
+        for i in range(25):
+            ts.record(_sample(i, t=t, power=200.0 + i, job_id=jid))
+            t += 1.0
+    path = str(tmp_path / "spill.npz")
+    n = ts.spill_npz(path)
+    assert n > 0
+    assert len(ts.windows) == 0                  # spill drops windows
+    back = TelemetryStore.from_npz(path)
+    assert back.window_s == 10.0
+    assert len(back.windows) == n
+    assert back.job_ids() == ["x", "y"]
+    # per-window payloads survive, including the sparse mode histograms
+    w = back.windows[0]
+    assert w.samples == 10 and w.mode_hist == {2: 10}
+    assert w.mean_power_w == pytest.approx(w.energy_j / 10.0)
+
+
+def test_spill_npz_rejects_unknown_schema(tmp_path):
+    import numpy as _np
+    path = str(tmp_path / "bad.npz")
+    _np.savez(path, schema=_np.int64(99), t_start=_np.empty(0))
+    with pytest.raises(ValueError, match="schema 99"):
+        TelemetryStore.from_npz(path)
+
+
 # ------------------------------------------------------------- job tagging
 def test_job_change_closes_window():
     """Windows must never mix job ids, even mid-window."""
