@@ -2,7 +2,7 @@ PYTHON ?= python
 # src for the package, . so `benchmarks` imports as a package everywhere
 export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-power bench bench-fast examples
+.PHONY: test test-fast test-power bench bench-fast examples validate-paper
 
 # Full suite — the tier-1 verification lane.
 test:
@@ -15,7 +15,14 @@ test-fast:
 # Just the power-management surface (the repro.power API + its engines).
 test-power:
 	$(PYTHON) -m pytest -x -q tests/test_power_api.py tests/test_power_model.py \
-		tests/test_surface.py tests/test_modal_governor.py tests/test_projection.py
+		tests/test_surface.py tests/test_modal_governor.py tests/test_projection.py \
+		tests/test_scenarios.py
+
+# The paper pin, standalone: reproduce Table V (freq + power caps) and the
+# 8.5% / 1438 MWh headline; exits non-zero on drift. Runs in the CI fast
+# lane so the pin is exercised on every PR.
+validate-paper:
+	$(PYTHON) -c "import repro.core.projection as p; raise SystemExit(p.validate_main())"
 
 bench:
 	$(PYTHON) benchmarks/run.py --quiet
@@ -32,3 +39,4 @@ examples:
 	$(PYTHON) examples/fleet_jobs_case_study.py
 	$(PYTHON) examples/cross_chip_projection.py
 	$(PYTHON) examples/streaming_replay.py
+	$(PYTHON) examples/scenario_study.py

@@ -1,0 +1,108 @@
+"""Scenario-grid execution vs a naive per-cell legacy loop (CI-gated).
+
+A 4x3x16 what-if grid (4 policies x 3 chips x 16 caps) over one shared
+job-granular workload must run >=5x faster per cell than evaluating each
+cell with its own standalone legacy entry-point calls (fresh
+decomposition / response-table derivation / chunked replay per cell) —
+the batching contract of `repro.power.scenarios`: one decomposition per
+workload, one projection pass per response surface, one replay per
+(policy, chip). The naive loop is timed on a 12-cell subset (one cap per
+policy x chip pair) and compared per cell; the subset's cells must also
+agree with the Study's bit-for-bit.
+"""
+import dataclasses
+import time
+from typing import List, Tuple
+
+from repro.core.hardware import MI250X_GCD, TPU_V5E
+from repro.power import (FleetAnalysis, JobTable, Study, Workload, replay,
+                         response_table)
+
+# a third (unregistered) chip: a low-clock MI250X bin — the resolver and
+# response_table accept bare ChipSpecs, no registry entry needed
+MI250X_LC = dataclasses.replace(MI250X_GCD, name="mi250x-lc", tdp_w=450.0,
+                                f_nominal_mhz=1500)
+
+N_JOBS = 300
+POLICIES = [None, ("energy-aware", {"slowdown_budget": 0.10}),
+            ("power-cap", {"cap_w": 400.0}), ("static", {"freq_mhz": 1100})]
+CHIP_AXIS = [MI250X_GCD, TPU_V5E, MI250X_LC]
+CAP_AXIS = [float(c) for c in range(1550, 750, -50)]           # 16 caps
+
+
+def _naive_cell(table: JobTable, scenario) -> Tuple[float, float]:
+    """One grid cell the pre-Study way: standalone legacy entry points,
+    nothing shared — a fresh FleetAnalysis (fresh decomposition), a fresh
+    model-derived response table, a fresh chunked replay."""
+    chip = scenario.resolved_chip()
+    cap = float(scenario.cap)
+    tables = None if chip.name == MI250X_GCD.name \
+        else response_table(chip, kind="freq")
+    if scenario.policy is None:
+        fa = FleetAnalysis.from_jobs(table).decompose()
+        row = fa.project([cap], "freq", tables=tables)[0]
+        return row.savings_pct, row.dt_pct
+    rep = replay(table.to_stream(), scenario.resolved_policy(), chip=chip,
+                 record_chip=table.chip,
+                 sample_interval_s=table.sample_interval_s)
+    rep.project([cap], "freq", tables=tables)
+    return rep.savings_pct, rep.dt_pct
+
+
+def run(verbose: bool = False) -> List[Tuple[str, float, str]]:
+    table = JobTable.synthetic(N_JOBS, seed=0, chip=MI250X_GCD)
+    n_samples = int(table.mask.sum())
+
+    study = Study(workloads=[Workload.from_jobs(table, name="bench")],
+                  chips=CHIP_AXIS, policies=POLICIES, caps=CAP_AXIS)
+    n_cells = len(study)
+    assert n_cells == 4 * 3 * 16
+
+    t_study = float("inf")
+    for _ in range(2):                           # best-of-2: stable CI gate
+        # a fresh workload each run: no decomposition cache crosses runs
+        s = Study(workloads=[Workload.from_jobs(table, name="bench")],
+                  chips=CHIP_AXIS, policies=POLICIES, caps=CAP_AXIS)
+        t0 = time.perf_counter()
+        res = s.run()
+        t_study = min(t_study, time.perf_counter() - t0)
+
+    # naive subset: one cap per (policy, chip) pair, legacy calls per cell
+    # (results are paired by position: run() keeps scenario order)
+    pairs = list(zip(s.scenarios(), res))
+    subset = []
+    for pol in POLICIES:
+        for chip, cap in zip(CHIP_AXIS, CAP_AXIS[::5]):
+            subset.append(next(
+                (sc, cell) for sc, cell in pairs
+                if sc.policy is pol and sc.chip is chip and sc.cap == cap))
+    t0 = time.perf_counter()
+    naive = [_naive_cell(table, sc) for sc, _ in subset]
+    t_naive = time.perf_counter() - t0
+    speedup = (t_naive / len(subset)) / (t_study / n_cells)
+
+    # the subset must agree with the Study bit-for-bit (the cells only
+    # *read* their slice of the shared batched passes)
+    for (sc, cell), (sav, dt) in zip(subset, naive):
+        assert cell.savings_pct == sav and cell.dt_pct == dt, \
+            (sc, cell.savings_pct, sav)
+
+    if verbose:
+        print(f"\n# scenario grid {n_cells} cells "
+              f"({len(POLICIES)}x{len(CHIP_AXIS)}x{len(CAP_AXIS)}) over "
+              f"{N_JOBS} jobs / {n_samples} samples")
+        print(f"study: {t_study * 1e3:.0f} ms "
+              f"({t_study / n_cells * 1e3:.2f} ms/cell)   naive subset "
+              f"({len(subset)} cells): {t_naive * 1e3:.0f} ms "
+              f"({t_naive / len(subset) * 1e3:.2f} ms/cell)   "
+              f"per-cell speedup: {speedup:.1f}x")
+    return [
+        ("scenario_grid_4x3x16", t_study * 1e6,
+         f"speedup_vs_percell={speedup:.1f}x;cells={n_cells};"
+         f"samples={n_samples}"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run(verbose=True):
+        print(",".join(str(x) for x in r))

@@ -18,8 +18,8 @@ def main(argv=None) -> None:
         json_path = argv[i + 1]
     from benchmarks import (bench_fleet_jobs, bench_membw, bench_modal,
                             bench_projection, bench_roofline_table,
-                            bench_stream, bench_surface, bench_train_step,
-                            bench_vai)
+                            bench_scenarios, bench_stream, bench_surface,
+                            bench_train_step, bench_vai)
     suites = [
         ("vai", bench_vai),                  # Figs. 4/5, Table III
         ("membw", bench_membw),              # Fig. 6
@@ -28,6 +28,7 @@ def main(argv=None) -> None:
         ("surface", bench_surface),          # batched sweeps vs scalar loop
         ("fleet_jobs", bench_fleet_jobs),    # §V job-level, batched vs loop
         ("stream", bench_stream),            # chunked replay vs sample loop
+        ("scenarios", bench_scenarios),      # study grid vs per-cell loop
         ("roofline", bench_roofline_table),  # §Roofline source
         ("train_step", bench_train_step),    # framework canary (slow)
     ]

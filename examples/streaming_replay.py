@@ -80,14 +80,13 @@ def main() -> None:
         print(f"  {label:28s} {target:12s} {rep.savings_pct:7.2f} "
               f"{rep.dt_pct:6.2f} {rep.model_bias_pct:6.1f}")
 
-    # the measurement-anchored counterpart: recorded energy split pushed
-    # through a model-derived TPU response table (cross-chip projection)
+    # the measurement-anchored counterpart: the last replay's accumulators
+    # already hold the recorded energy split, so projecting it through a
+    # model-derived TPU response table needs no re-ingestion
     tables = response_table("tpu-v5e", kind="freq")
-    rep = replay(iter_npz(paths), "energy-aware", chip="tpu-v5e",
-                 record_chip=chip, tables=tables)
     print("\nresponse-table projection of the recorded trace "
           f"(tables={tables.source}):")
-    for row in rep.projection:
+    for row in rep.project(tables=tables):
         print(f"  cap {row.cap:6.0f} MHz: savings {row.savings_pct:5.2f}% "
               f"dT {row.dt_pct:5.2f}%  (dT=0 share {row.savings_dt0_pct:.2f}%)")
 

@@ -54,6 +54,17 @@ class ResponseTables:
     source: str = "mi250x-table-iii"
 
 
+def check_tables_kind(tables: ResponseTables, kind: str) -> ResponseTables:
+    """Guard shared by the projection engine and the scenario-layer
+    resolver: response tables are keyed in one cap unit and must match the
+    projection's ``kind``."""
+    if tables.kind != kind:
+        raise ValueError(
+            f"response tables are {tables.kind!r}-keyed but the projection "
+            f"was asked for kind={kind!r}")
+    return tables
+
+
 def builtin_tables(kind: str = "freq") -> ResponseTables:
     """The paper's measured MI250X Table III columns for ``kind``."""
     if kind == "freq":
@@ -152,10 +163,8 @@ def project_batch(caps: Union[List[float], np.ndarray], kind: str = "freq",
     """
     if tables is None:
         tables = builtin_tables(kind)
-    elif tables.kind != kind:
-        raise ValueError(
-            f"response tables are {tables.kind!r}-keyed but the projection "
-            f"was asked for kind={kind!r}")
+    else:
+        check_tables_kind(tables, kind)
     vai, mb = tables.vai, tables.mb
     caps = np.asarray(caps, dtype=np.float64)
     r_ci = interp_response_batch(vai, caps)       # (caps, 3)
@@ -236,3 +245,42 @@ def validate_against_paper(kind: str = "freq", tol_mwh: float = 3.0,
         errs["dt"] = max(errs["dt"], abs(r.dt_pct - ref["dt"]))
         errs["sav0"] = max(errs["sav0"], abs(r.savings_dt0_pct - ref["sav0"]))
     return errs
+
+
+def validate_main() -> int:
+    """CI fast-lane entry (``make validate-paper``): reproduce
+    Table V for both cap kinds and pin the paper's abstract headline
+    (8.5% savings at dT=0 == the 1438 MWh M.I. cell at 900 MHz). Exit 1 on
+    any violation — runs on every PR, not only in the slow test tier."""
+    # tolerances mirror tests/test_projection.py (the mi/freq bound absorbs
+    # one Table-III rounding artifact at the 1100 MHz cell)
+    bounds = {
+        "freq": {"ci": 1.0, "mi": 8.0, "sav": 0.15, "dt": 0.15,
+                 "sav0": 0.15},
+        "power": {"ci": 0.2, "mi": 0.2, "sav": 0.05, "dt": 0.1},
+    }
+    failures = []
+    for kind, tol in bounds.items():
+        errs = validate_against_paper(kind)
+        for key, bound in tol.items():
+            status = "ok" if errs[key] < bound else "FAIL"
+            print(f"table-v[{kind}] {key:5s} max|err| {errs[key]:7.3f} "
+                  f"(< {bound})  {status}")
+            if errs[key] >= bound:
+                failures.append(f"{kind}:{key}={errs[key]:.3f}")
+    head = project([900], "freq")[0]
+    for name, got, want, tol in (
+            ("mi_mwh", head.mi_mwh, 1438.3, 1.0),
+            ("savings_dt0_pct", head.savings_dt0_pct, 8.5, 0.15),
+            ("savings_pct", head.savings_pct, 8.8, 0.15)):
+        status = "ok" if abs(got - want) < tol else "FAIL"
+        print(f"headline @900MHz {name:16s} {got:8.2f} "
+              f"(paper {want} +- {tol})  {status}")
+        if abs(got - want) >= tol:
+            failures.append(f"headline:{name}={got:.2f}")
+    if failures:
+        print(f"paper validation FAILED: {', '.join(failures)}")
+        return 1
+    print("paper validation ok: Table V (freq+power) and the "
+          "8.5% / 1438 MWh headline reproduced")
+    return 0

@@ -34,6 +34,16 @@ stream    — out-of-core telemetry: :class:`StreamingTelemetry` folds shard
             :func:`replay` re-runs a recorded trace under any policy/chip
             with one batched decision pass per chunk — policy x chip
             counterfactual sweeps at month scale, O(shard) memory
+scenarios — the declarative what-if surface: a :class:`Scenario` names one
+            grid cell (:class:`Workload` x chip x policy x cap x tables), a
+            :class:`Study` expands axes into the cartesian grid and runs it
+            batched (one decomposition per workload, one projection pass
+            per response surface, one chunked replay per policy x chip),
+            returning a columnar :class:`StudyResult` with ``compare()`` /
+            ``best("dT<=0.5")`` / ``pivot()`` / ``to_markdown()``; every
+            ``tables=`` spelling resolves through one
+            :func:`resolve_tables`. The entry points above are single-cell
+            views of this engine
 
 Typical driver:
 
@@ -75,6 +85,9 @@ from repro.power.stream import (  # noqa: F401
     ReplayReport, SampleShard, StreamingModal, StreamingTelemetry,
     iter_array, iter_jobs, iter_jsonl, iter_npz, iter_store, replay,
     write_jsonl)
+from repro.power.scenarios import (  # noqa: F401
+    CellResult, Scenario, Study, StudyResult, TablesLike, Workload,
+    cap_label, resolve_tables)
 
 __all__ = [
     # chip model
@@ -103,4 +116,7 @@ __all__ = [
     "ReplayReport", "SampleShard", "StreamingModal", "StreamingTelemetry",
     "iter_array", "iter_jobs", "iter_jsonl", "iter_npz", "iter_store",
     "replay", "write_jsonl",
+    # declarative scenario studies (the grid surface over everything above)
+    "CellResult", "Scenario", "Study", "StudyResult", "TablesLike",
+    "Workload", "cap_label", "resolve_tables",
 ]

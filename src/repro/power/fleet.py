@@ -21,6 +21,7 @@ single-job special case.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -30,7 +31,7 @@ from repro.core.modal import (BatchModalDecomposition, ModalDecomposition,
                               decompose, detect_peaks, power_histogram,
                               synth_fleet_powers)
 from repro.core.projection import (BatchProjection, ProjectionRow,
-                                   ResponseTables, domain_targeted_project,
+                                   domain_targeted_project,
                                    project_from_decomposition)
 from repro.core.telemetry import TelemetryStore
 from repro.power import jobs as jobs_mod
@@ -184,26 +185,39 @@ class FleetAnalysis:
         return self.decomposition
 
     def project(self, caps: List[float], kind: str = "freq",
-                tables: Optional[ResponseTables] = None
-                ) -> List[ProjectionRow]:
+                tables: "TablesLike" = None) -> List[ProjectionRow]:
         """Project fleet savings for a cap schedule (Tables V/VI engine)
-        from this fleet's own modal energy split. ``kind`` is ``"freq"``
-        (MHz caps) or ``"power"`` (watt caps); ``tables`` swaps the measured
-        MI250X response surface for a model-derived one (e.g.
-        ``repro.power.response_table("tpu-v5e")`` — cross-chip what-if)."""
-        return project_from_decomposition(self._decomposition(), caps, kind,
-                                          tables=tables)
+        from this fleet's own modal energy split — the single-cell view of
+        a projection :class:`repro.power.Scenario`. ``kind`` is ``"freq"``
+        (MHz caps) or ``"power"`` (watt caps); ``tables`` is any
+        :data:`~repro.power.scenarios.TablesLike` — e.g. ``"tpu-v5e"`` or
+        a :class:`ResponseTables` swaps the measured MI250X response
+        surface for a model-derived one (cross-chip what-if)."""
+        from repro.power.scenarios import resolve_tables
+        return project_from_decomposition(
+            self._decomposition(), caps, kind,
+            tables=resolve_tables(tables, kind=kind, chip=self.chip))
 
     def project_domains(self,
                         domain_energies: Mapping[str, Tuple[float, float]],
                         caps: List[float], kind: str = "freq",
-                        tables: Optional[ResponseTables] = None
+                        tables: "TablesLike" = None
                         ) -> Dict[str, List[ProjectionRow]]:
-        """Table VI analogue: cap only selected science domains / job-size
-        classes. ``domain_energies``: name -> (E_CI, E_MI) MWh."""
+        """Deprecated spelling of the Table VI analogue (cap only selected
+        science domains / job-size classes): each domain is a
+        :meth:`repro.power.Workload.from_energies` workload now, so the
+        sweep is one :class:`repro.power.Study` over those workloads.
+        ``domain_energies``: name -> (E_CI, E_MI) MWh."""
+        warnings.warn(
+            "repro.power.FleetAnalysis.project_domains is deprecated; run a "
+            "Study over Workload.from_energies(ci, mi, total) workloads "
+            "(repro.power.scenarios) instead",
+            DeprecationWarning, stacklevel=2)
+        from repro.power.scenarios import resolve_tables
         e_total = self._decomposition().total_energy_mwh
-        return domain_targeted_project(domain_energies, caps, kind,
-                                       e_total_mwh=e_total, tables=tables)
+        return domain_targeted_project(
+            domain_energies, caps, kind, e_total_mwh=e_total,
+            tables=resolve_tables(tables, kind=kind, chip=self.chip))
 
     # ---------------------------------------------------------- job surface
     def _require_jobs(self) -> "jobs_mod.JobTable":
@@ -226,22 +240,27 @@ class FleetAnalysis:
         return jobs_mod.classify_jobs(self.per_job())
 
     def project_jobs(self, caps: Sequence[float], kind: str = "freq",
-                     tables: Optional[ResponseTables] = None
-                     ) -> BatchProjection:
+                     tables: "TablesLike" = None) -> BatchProjection:
         """Per-job cap projection with per-job dT weights; all arrays are
-        ``(jobs, caps)``."""
-        return jobs_mod.project_jobs(self.per_job(), caps, kind,
-                                     tables=tables)
+        ``(jobs, caps)``. ``tables`` accepts any
+        :data:`~repro.power.scenarios.TablesLike`."""
+        from repro.power.scenarios import resolve_tables
+        return jobs_mod.project_jobs(
+            self.per_job(), caps, kind,
+            tables=resolve_tables(tables, kind=kind, chip=self.chip))
 
     def job_report(self, caps: Optional[Sequence[float]] = None,
-                   kind: str = "freq",
-                   tables: Optional[ResponseTables] = None
+                   kind: str = "freq", tables: "TablesLike" = None
                    ) -> "jobs_mod.FleetJobsReport":
         """Per-class cap schedule + aggregate savings (the paper's §V job-
         granular result: C.I. jobs capped for maximum savings, M.I. jobs
-        capped at dT=0, latency-bound jobs left alone)."""
-        return jobs_mod.class_cap_report(self.per_job(), caps, kind,
-                                         tables=tables)
+        capped at dT=0, latency-bound jobs left alone) — the single-cell
+        view of a schedule :class:`repro.power.Scenario` (``policy=None``,
+        ``cap`` a sequence or ``None``)."""
+        from repro.power.scenarios import resolve_tables
+        return jobs_mod.class_cap_report(
+            self.per_job(), caps, kind,
+            tables=resolve_tables(tables, kind=kind, chip=self.chip))
 
     # -------------------------------------------------------------- summary
     def summary(self) -> dict:

@@ -433,8 +433,7 @@ def class_cap_report(decomp: BatchModalDecomposition,
                      caps: Optional[Sequence[float]] = None,
                      kind: str = "freq",
                      dt0_tol_pct: float = DT0_TOL_PCT,
-                     tables: Optional[ResponseTables] = None
-                     ) -> FleetJobsReport:
+                     tables=None) -> FleetJobsReport:
     """Assign each job class its cap and aggregate the projected savings.
 
     Policy (paper §V-C): latency-bound jobs are never capped (no savings
@@ -443,9 +442,12 @@ def class_cap_report(decomp: BatchModalDecomposition,
     performance compromise" criterion); compute-intensive jobs take the
     unconstrained savings-maximizing cap, accepting the projected slowdown.
 
-    ``tables`` swaps the measured MI250X response surface for a
-    model-derived one (cross-chip what-if).
+    ``tables`` (any :data:`repro.power.scenarios.TablesLike` — a chip name,
+    a :class:`ResponseTables`, ``None`` for the measured MI250X columns)
+    swaps the response surface (cross-chip what-if).
     """
+    from repro.power.scenarios import resolve_tables
+    tables = resolve_tables(tables, kind=kind)
     if caps is None:
         caps = default_caps(kind, tables)
     caps = tuple(float(c) for c in caps)
@@ -510,10 +512,12 @@ def class_cap_report(decomp: BatchModalDecomposition,
 
 def project_jobs(decomp: BatchModalDecomposition,
                  caps: Sequence[float], kind: str = "freq",
-                 tables: Optional[ResponseTables] = None
-                 ) -> BatchProjection:
+                 tables=None) -> BatchProjection:
     """Per-job savings projection over the whole population with per-job dT
-    weights — one vectorized call, no loop over jobs."""
+    weights — one vectorized call, no loop over jobs. ``tables`` accepts
+    any :data:`repro.power.scenarios.TablesLike`."""
+    from repro.power.scenarios import resolve_tables
+    tables = resolve_tables(tables, kind=kind)
     return project_batch(caps, kind,
                          e_ci_mwh=decomp.energy_mwh[:, 2],
                          e_mi_mwh=decomp.energy_mwh[:, 1],

@@ -28,11 +28,13 @@ module is the O(shard)-memory alternative:
   through ONE batched ``decide_batch`` call, yielding per-job and fleet
   energy/runtime deltas — the policy x chip scenario sweep (e.g. an
   MI250X-measured trace replayed under a TPU-v5e energy-aware policy, with
-  ``tables=response_table("tpu-v5e")`` adding the cap-projection view).
+  :meth:`ReplayReport.project` adding the cap-projection view — or, for
+  whole grids at once, a :class:`repro.power.Study` of replay cells).
 """
 from __future__ import annotations
 
 import json
+import warnings
 from dataclasses import asdict, dataclass
 from typing import (Dict, Iterable, Iterator, List, Optional, Sequence,
                     Tuple, Union)
@@ -513,6 +515,9 @@ class ReplayReport:
     recorded: ModalDecomposition
     replayed: ModalDecomposition
     projection: Optional[List[ProjectionRow]] = None
+    # the evaluation chip's full spec (``chip`` is just its name): what
+    # tables="auto" in :meth:`project` resolves against
+    chip_spec: Optional[ChipSpec] = None
 
     @property
     def savings_pct(self) -> float:
@@ -539,12 +544,14 @@ class ReplayReport:
         return {r.job_id: r for r in self.jobs}
 
     def project(self, caps: Optional[Sequence[float]] = None,
-                kind: str = "freq",
-                tables: Optional[ResponseTables] = None
-                ) -> List[ProjectionRow]:
+                kind: str = "freq", tables=None) -> List[ProjectionRow]:
         """Cap-schedule projection of the *recorded* trace (another
-        scenario axis on the same replayed stream — no re-ingestion)."""
+        scenario axis on the same replayed stream — no re-ingestion).
+        ``tables`` accepts any :data:`repro.power.scenarios.TablesLike`;
+        this is what a Study replay cell with a ``cap`` attaches."""
         from repro.power.jobs import default_caps
+        from repro.power.scenarios import resolve_tables
+        tables = resolve_tables(tables, kind=kind, chip=self.chip_spec)
         caps = list(caps) if caps is not None else list(
             default_caps(kind, tables))
         return project_from_decomposition(self.recorded, caps, kind,
@@ -575,7 +582,8 @@ def replay(stream: Iterable[ShardLike], policy: PolicyLike,
            caps: Optional[Sequence[float]] = None, kind: str = "freq",
            sample_interval_s: float = 15.0, **policy_knobs
            ) -> ReplayReport:
-    """Re-run a recorded telemetry stream under ``policy`` on ``chip``.
+    """Re-run a recorded telemetry stream under ``policy`` on ``chip`` —
+    the single-cell view of a replay :class:`repro.power.Scenario`.
 
     Per chunk (never per sample): classify/accept the recorded modes,
     invert the recording chip's power model into roofline profiles
@@ -583,10 +591,12 @@ def replay(stream: Iterable[ShardLike], policy: PolicyLike,
     ONE batched ``decide_batch`` call; per-job and fleet recorded-vs-
     replayed energy/runtime accumulate with O(chunk) memory. ``record_chip``
     defaults to ``chip`` (same-chip what-if); pass the chip the trace was
-    measured on for cross-chip replays. ``tables`` (+ optional ``caps`` /
-    ``kind``) additionally projects the recorded energy split through a
-    response-table surface (:func:`repro.power.response_table`), giving the
-    policy x chip scenario sweep a second, measurement-anchored estimate.
+    measured on for cross-chip replays.
+
+    ``tables`` / ``caps`` / ``kind`` (deprecated): attach the response-
+    table projection of the recorded trace to the report. Call
+    :meth:`ReplayReport.project` — or give the Scenario a ``cap`` — for
+    the same rows without re-ingesting.
     """
     model = ChipModel(chip)
     rec_model = ChipModel(record_chip) if record_chip is not None else model
@@ -649,7 +659,7 @@ def replay(stream: Iterable[ShardLike], policy: PolicyLike,
         total_energy_mwh=e_new / 3.6e9,
         sample_interval_s=sample_interval_s)
     report = ReplayReport(
-        policy=pol.name, chip=model.spec.name,
+        policy=pol.name, chip=model.spec.name, chip_spec=model.spec,
         record_chip=rec_model.spec.name, n_samples=n,
         energy_rec_j=e_rec, energy_base_j=e_base, energy_new_j=e_new,
         time_rec_s=t_rec, time_new_s=t_new,
@@ -657,5 +667,11 @@ def replay(stream: Iterable[ShardLike], policy: PolicyLike,
               for jid, row in per_job.items()],
         recorded=rec_acc.decomposition(), replayed=replayed)
     if tables is not None or caps is not None:
+        warnings.warn(
+            "repro.power.stream.replay's tables=/caps=/kind= projection "
+            "attachment is deprecated; call ReplayReport.project(caps, "
+            "kind, tables) on the result, or give the repro.power.Scenario "
+            "replay cell a cap",
+            DeprecationWarning, stacklevel=2)
         report.projection = report.project(caps, kind, tables)
     return report

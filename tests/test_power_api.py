@@ -241,10 +241,16 @@ def test_fleet_analysis_end_to_end_vs_paper_validation():
 
 
 def test_fleet_analysis_domain_targeting():
+    """Domain-targeted capping (Table VI): one Study over per-domain
+    energy workloads (the project_domains successor spelling)."""
+    from repro.power import Study, Workload
     fleet = FleetAnalysis.synthetic(100_000, seed=1).decompose()
     e_ci = fleet.decomposition.energy_mwh[3]
     e_mi = fleet.decomposition.energy_mwh[2]
-    out = fleet.project_domains({"chm": (e_ci / 2, e_mi / 2)}, [900])
+    e_total = fleet.decomposition.total_energy_mwh
+    out = Study(workloads=[Workload.from_energies(e_ci / 2, e_mi / 2,
+                                                  e_total, name="chm")],
+                caps=[900.0]).run()
     # half the fleet's modal energy -> half the fleet-wide projected savings
     full = fleet.project([900])[0].total_mwh
-    assert out["chm"][0].total_mwh == pytest.approx(full / 2, rel=1e-9)
+    assert out[0].savings_mwh == pytest.approx(full / 2, rel=1e-9)

@@ -1,0 +1,545 @@
+"""`repro.power.scenarios`: the declarative Study surface.
+
+The load-bearing contract is cell parity: every Study cell must be
+bit-for-bit equal to the corresponding legacy entry-point call
+(`FleetAnalysis.project` / `job_report`, `stream.replay` +
+`ReplayReport.project`), across workload kinds and randomized grids —
+the Study only *groups* work, it never changes the arithmetic.
+"""
+import inspect
+
+import numpy as np
+import pytest
+
+from repro.core.hardware import MI250X_GCD, TPU_V5E
+from repro.core.modal import synth_fleet_powers
+from repro.core.projection import project
+from repro.core.telemetry import StepSample, TelemetryStore
+from repro.power import (FleetAnalysis, JobTable, ResponseTables, Scenario,
+                         Study, StudyResult, Workload, builtin_tables,
+                         cap_label, replay, resolve_tables, response_table)
+
+CAP_GRID = [1500.0, 1300.0, 1100.0, 900.0, 700.0]
+
+
+def _store_workload(seed: int = 0) -> Workload:
+    """A job-tagged TelemetryStore workload (windowed means)."""
+    rng = np.random.default_rng(seed)
+    ts = TelemetryStore(window_s=15.0)
+    t = 0.0
+    for jid in ("jobA", "jobB", "jobC"):
+        mu = float(rng.uniform(150, 520))
+        for i in range(40):
+            p = float(np.clip(rng.normal(mu, 30), 95, 600))
+            ts.record(StepSample(step=i, t=t, duration_s=15.0, power_w=p,
+                                 energy_j=p * 15.0, mode=2, freq_mhz=1700,
+                                 job_id=jid))
+            t += 15.0
+    ts.flush()
+    return Workload.from_store(ts, chip=MI250X_GCD, name="store")
+
+
+def _workloads(tmp_path):
+    """One workload per source kind (powers / store / jobs / npz stream /
+    synthetic)."""
+    table = JobTable.synthetic(60, seed=3, chip=MI250X_GCD)
+    store = _store_workload()
+    # an independent store feeds the .npz stream workload (spill_npz drains
+    # the windows it writes, so the store workload keeps its own instance)
+    spill = str(tmp_path / "spill.npz")
+    _store_workload(seed=9)._store.spill_npz(spill)
+    return [
+        Workload.from_powers(synth_fleet_powers(5000, seed=1), name="powers"),
+        store,
+        Workload.from_jobs(table, name="jobs"),
+        Workload.from_stream(spill, name="npz"),
+        Workload.synthetic(4000, seed=2),
+    ]
+
+
+# --------------------------------------------------------------- the resolver
+def test_resolve_tables_measured_and_explicit():
+    assert resolve_tables(None) is None
+    assert resolve_tables("measured", kind="power") is None
+    rt = response_table("tpu-v5e", kind="freq")
+    assert resolve_tables(rt) is rt
+    with pytest.raises(ValueError, match="keyed"):
+        resolve_tables(rt, kind="power")
+    with pytest.raises(TypeError, match="resolve response tables"):
+        resolve_tables(3.14)
+
+
+def test_resolve_tables_model_derived_is_cached():
+    a = resolve_tables("tpu-v5e", kind="freq")
+    b = resolve_tables(TPU_V5E, kind="freq")
+    assert a is b                      # lru-cached by (chip name, kind)
+    assert a.source == "model:tpu-v5e"
+    # equal to the direct legacy derivation
+    ref = response_table("tpu-v5e", kind="freq")
+    assert a.vai == ref.vai and a.mb == ref.mb
+
+
+def test_resolve_tables_auto_rule():
+    # auto == measured on the paper's chip (and with no chip context)…
+    assert resolve_tables("auto") is None
+    assert resolve_tables("auto", chip=MI250X_GCD) is None
+    # …and model-derived anywhere else
+    rt = resolve_tables("auto", chip="tpu-v5e", kind="freq")
+    assert rt is not None and rt.source == "model:tpu-v5e"
+
+
+# ------------------------------------------------------------- cell semantics
+def test_scenario_cell_shapes():
+    w = Workload.paper_fleet()
+    assert Scenario(w, cap=900).cell == "project"
+    assert Scenario(w, cap=(1300, 900)).cell == "schedule"
+    assert Scenario(w, cap=None).cell == "schedule"
+    assert Scenario(w, policy="energy-aware").cell == "replay"
+
+
+def test_paper_fleet_workload_reproduces_table_v():
+    """Scenario(paper_fleet, cap) == projection.project on the paper's
+    published fleet constants — the Table V engine as one cell."""
+    res = Study(workloads=[Workload.paper_fleet()], caps=CAP_GRID).run()
+    legacy = project(CAP_GRID, "freq")
+    assert len(res) == len(legacy)
+    for cell, row in zip(res, legacy):
+        assert cell.savings_pct == row.savings_pct
+        assert cell.dt_pct == row.dt_pct
+        assert cell.savings_mwh == row.total_mwh
+        assert cell.savings_dt0_pct == row.savings_dt0_pct
+        assert cell.detail == row
+
+
+def test_energies_only_workload_rejects_replay_and_schedule():
+    w = Workload.paper_fleet()
+    with pytest.raises(ValueError, match="energies only"):
+        Scenario(w, policy="energy-aware").run()
+    with pytest.raises(ValueError, match="energies only"):
+        Scenario(w, cap=None).run()    # schedule needs samples/jobs
+
+
+def test_flat_workload_rejects_schedule_cells():
+    w = Workload.synthetic(2000, seed=0)
+    with pytest.raises(ValueError, match="per-job"):
+        Scenario(w, cap=tuple(CAP_GRID)).run()
+
+
+def test_store_workload_is_a_frozen_snapshot():
+    """Recording into the live store after Workload.from_store must not
+    leak into ANY cell kind — projection and replay always describe the
+    same snapshot."""
+    w = _store_workload(seed=2)
+    total_before = w.fleet()._decomposition().total_energy_mwh
+    n_stream = sum(len(s) for s in w.stream())
+    # keep recording into the live store the workload was built from…
+    live = _live_store_for_snapshot()
+    w2 = Workload.from_store(live, name="s")
+    n0 = sum(len(s) for s in w2.stream())
+    for i in range(20):
+        live.record(StepSample(step=i, t=1e6 + i * 15.0, duration_s=15.0,
+                               power_w=400.0, energy_j=6000.0, mode=2,
+                               freq_mhz=1700, job_id="late"))
+    live.flush()
+    assert sum(len(s) for s in w2.stream()) == n0           # stream frozen
+    assert "late" not in w2.fleet().jobs.job_ids            # jobs frozen
+    # and the first workload's numbers were stable all along
+    assert w.fleet()._decomposition().total_energy_mwh == total_before
+    assert sum(len(s) for s in w.stream()) == n_stream
+
+
+def _live_store_for_snapshot() -> TelemetryStore:
+    ts = TelemetryStore(window_s=15.0)
+    t = 0.0
+    for jid in ("a", "b"):
+        for i in range(30):
+            ts.record(StepSample(step=i, t=t, duration_s=15.0, power_w=300.0,
+                                 energy_j=4500.0, mode=2, freq_mhz=1700,
+                                 job_id=jid))
+            t += 15.0
+    return ts
+
+
+# -------------------------------------------------------- randomized parity
+def test_randomized_grid_parity_all_workload_kinds(tmp_path):
+    """Acceptance: every Study cell — project / schedule / replay, across
+    workload kinds and randomized axes — equals its standalone legacy
+    entry-point call bit-for-bit."""
+    rng = np.random.default_rng(7)
+    policies = [None, "energy-aware",
+                ("energy-aware", {"slowdown_budget": 0.1}),
+                ("power-cap", {"cap_w": 400.0}),
+                ("static", {"freq_mhz": 1100})]
+    for w in _workloads(tmp_path):
+        chips = [None, "tpu-v5e"]
+        caps = [float(rng.choice(CAP_GRID))]
+        if w.name in ("store", "jobs", "npz"):     # multi-job workloads
+            caps.append(tuple(sorted(
+                rng.choice(CAP_GRID, size=3, replace=False), reverse=True)))
+        pol = policies[int(rng.integers(len(policies)))]
+        study = Study(workloads=[w], chips=chips,
+                      policies=[None, pol] if pol else [None], caps=caps)
+        res = study.run()
+        fa = w.fleet()
+        for s, cell in zip(study.scenarios(), res):
+            tables = s.resolved_tables()
+            if cell.cell == "project":
+                ref = fa.project([float(s.cap)], s.kind, tables=tables)[0]
+                assert cell.detail == ref, (w.name, s)
+                assert cell.savings_pct == ref.savings_pct
+                assert cell.dt_pct == ref.dt_pct
+            elif cell.cell == "schedule":
+                ref = fa.job_report(s.caps_list(), s.kind, tables=tables)
+                assert cell.detail.to_dict() == ref.to_dict(), (w.name, s)
+                assert cell.savings_pct == ref.savings_pct
+                assert cell.savings_mwh == ref.total_savings_mwh
+            else:
+                ref = replay(w.stream(), s.resolved_policy(),
+                             chip=s.resolved_chip(), record_chip=w.chip,
+                             sample_interval_s=w.sample_interval_s)
+                assert cell.savings_pct == ref.savings_pct, (w.name, s)
+                assert cell.dt_pct == ref.dt_pct
+                assert cell.model_bias_pct == ref.model_bias_pct
+                assert [r.energy_new_j for r in cell.detail.jobs] \
+                    == [r.energy_new_j for r in ref.jobs]
+                if s.cap is not None:
+                    rows = ref.project(s.caps_list(), s.kind, tables=tables)
+                    assert cell.projection == rows
+
+
+def test_streaming_replay_cell_parity(tmp_path):
+    """The streaming-replay cell: an .npz spill stream workload replayed
+    under a policy x chip pair equals the standalone chunked replay."""
+    store = _store_workload(seed=5)
+    spill = str(tmp_path / "s.npz")
+    store._store.spill_npz(spill)
+    w = Workload.from_stream(spill, name="spills")
+    cell = Scenario(w, chip="tpu-v5e", policy="energy-aware",
+                    cap=900.0).run()[0]
+    from repro.power.stream import iter_npz
+    ref = replay(iter_npz(spill), "energy-aware", chip="tpu-v5e",
+                 record_chip=MI250X_GCD, sample_interval_s=15.0)
+    assert cell.savings_pct == ref.savings_pct
+    assert cell.dt_pct == ref.dt_pct
+    rows = ref.project([900.0], "freq", tables="tpu-v5e")
+    assert cell.projection == rows
+
+
+# ----------------------------------------------------------- batched grouping
+def test_study_shares_replay_passes_across_caps(monkeypatch):
+    """4 caps x 1 (policy, chip) must run ONE chunked replay, not 4 — the
+    grid batching contract."""
+    calls = []
+    real = replay
+
+    def counting_replay(*a, **k):
+        calls.append(1)
+        return real(*a, **k)
+
+    import repro.power.stream as stream_mod
+    monkeypatch.setattr(stream_mod, "replay", counting_replay)
+    w = Workload.synthetic_jobs(30, seed=0)
+    res = Study(workloads=[w], policies=["energy-aware"],
+                caps=[1500.0, 1300.0, 1100.0, 900.0]).run()
+    assert len(res) == 4
+    assert len(calls) == 1
+    assert len({c.savings_pct for c in res}) == 1      # shared headline
+    assert [c.projection[0].cap for c in res] == [1500, 1300, 1100, 900]
+
+
+def test_study_shares_decomposition_across_projection_cells():
+    w = Workload.synthetic(3000, seed=0)
+    Study(workloads=[w], caps=CAP_GRID).run()
+    fa = w.fleet()
+    assert fa.decomposition is not None        # computed once, cached
+    ref = FleetAnalysis.from_powers(
+        synth_fleet_powers(3000, seed=0)).decompose()
+    assert fa.decomposition.energy_mwh == ref.decomposition.energy_mwh
+
+
+def test_same_named_chip_variants_are_distinct_cells():
+    """Two ChipSpec variants sharing a name are different chips: distinct
+    replay passes and distinct auto-resolved response surfaces (identity
+    is the full frozen spec, never the name)."""
+    import dataclasses
+    variant = dataclasses.replace(MI250X_GCD, tdp_w=300.0)
+    w = Workload.synthetic(2000, seed=6)
+    res = Study(workloads=[w], chips=[MI250X_GCD, variant],
+                policies=["energy-aware"], caps=[900.0]).run()
+    ref0 = replay(w.stream(), "energy-aware", chip=MI250X_GCD,
+                  record_chip=w.chip, sample_interval_s=15.0)
+    ref1 = replay(w.stream(), "energy-aware", chip=variant,
+                  record_chip=w.chip, sample_interval_s=15.0)
+    assert res[0].savings_pct == ref0.savings_pct
+    assert res[1].savings_pct == ref1.savings_pct
+    assert ref0.savings_pct != ref1.savings_pct
+    # tables="auto": the variant is NOT the paper's measured chip
+    assert resolve_tables("auto", chip=variant) is not None
+    assert resolve_tables("auto", chip=MI250X_GCD) is None
+
+
+def test_replay_report_project_auto_matches_study_cell():
+    """ReplayReport.project(tables="auto") resolves against the replay's
+    evaluation chip — the same rows a Study replay cell attaches."""
+    w = Workload.synthetic(2000, seed=8)
+    cell = Scenario(w, chip="tpu-v5e", policy="energy-aware",
+                    cap=900.0).run()[0]
+    rep = replay(w.stream(), "energy-aware", chip="tpu-v5e",
+                 record_chip=w.chip, sample_interval_s=15.0)
+    assert rep.project([900.0], tables="auto") == cell.projection
+    # and differs from the measured-table spelling (it's a TPU surface)
+    assert rep.project([900.0], tables=None) != cell.projection
+
+
+# ------------------------------------------------------------ StudyResult API
+@pytest.fixture(scope="module")
+def grid_result():
+    w = Workload.synthetic_jobs(80, seed=1)
+    return Study(workloads=[w], chips=["mi250x-gcd", "tpu-v5e"],
+                 caps=CAP_GRID).run()
+
+
+def test_best_respects_constraint(grid_result):
+    best = grid_result.best("dT<=2")
+    assert best.dt_pct <= 2
+    assert best.savings_pct == max(
+        c.savings_pct for c in grid_result if c.dt_pct <= 2)
+    unconstrained = grid_result.best()
+    assert unconstrained.savings_pct >= best.savings_pct
+    with pytest.raises(ValueError, match="no cell satisfies"):
+        grid_result.best("savings>=99")
+    with pytest.raises(ValueError, match="cannot parse"):
+        grid_result.best("dT ? 3")
+    with pytest.raises(KeyError, match="unknown metric"):
+        grid_result.best("frobnicate<=1")
+
+
+def test_where_and_filter(grid_result):
+    sub = grid_result.filter(chip="tpu-v5e")
+    assert len(sub) == len(CAP_GRID)
+    assert all(c.chip == "tpu-v5e" for c in sub)
+    tight = grid_result.where(["dT<=2", "savings>0"])
+    assert len(tight) and all(c.dt_pct <= 2 and c.savings_pct > 0
+                              for c in tight)
+    assert len(grid_result.filter(cap=900.0)) == 2
+
+
+def test_filter_policy_matches_bare_name():
+    """filter(policy=<name>) selects knob-bearing variants too — the label
+    alone would silently return an empty subset."""
+    w = Workload.synthetic_jobs(30, seed=8)
+    res = Study(workloads=[w],
+                policies=[None, ("energy-aware", {"slowdown_budget": 0.1})],
+                caps=[900.0]).run()
+    sub = res.filter(policy="energy-aware")
+    assert len(sub) == 1 and sub[0].cell == "replay"
+    assert len(res.filter(policy=sub[0].policy)) == 1   # full label works
+    assert len(res.filter(policy="-")) == 1             # projection cell
+
+
+def test_compare_ranks_descending(grid_result):
+    ranked = grid_result.compare()
+    sav = ranked.savings_pct
+    assert list(sav) == sorted(sav, reverse=True)
+
+
+def test_pivot_and_markdown(grid_result):
+    rows, cols, mat = grid_result.pivot(rows="cap", cols="chip")
+    assert rows == [cap_label(c) for c in CAP_GRID]
+    assert cols == ["mi250x-gcd", "tpu-v5e"]
+    assert mat.shape == (5, 2) and np.isfinite(mat).all()
+    md = grid_result.to_markdown(rows="cap", cols="chip")
+    assert md.count("\n") == len(CAP_GRID) + 1
+    assert "| cap \\ chip | mi250x-gcd | tpu-v5e |" in md
+    flat = grid_result.to_markdown()
+    assert flat.count("\n") == len(grid_result) + 1
+    assert str(grid_result) == flat
+
+
+def test_pivot_ambiguity_raises():
+    w = Workload.synthetic_jobs(30, seed=2)
+    res = Study(workloads=[w], policies=[None, "energy-aware"],
+                caps=[900.0]).run()
+    with pytest.raises(ValueError, match="ambiguous"):
+        res.pivot(rows="cap", cols="chip")
+    res.filter(cell="project").pivot(rows="cap", cols="chip")
+
+
+def test_columns_and_dicts(grid_result):
+    assert isinstance(grid_result.savings_pct, np.ndarray)
+    assert grid_result.column("sav0") is not None
+    assert grid_result.column("cap") == [cap_label(c.cap)
+                                         for c in grid_result]
+    d = grid_result.to_dicts()[0]
+    assert d["cell"] == "project" and "detail" not in d
+
+
+def test_tuple_axis_values_are_single_cells():
+    """A tuple is one axis value, never an axis: a bare cap tuple is ONE
+    schedule cell and a (name, knobs) tuple is ONE policy spec."""
+    w = Workload.synthetic_jobs(30, seed=3)
+    res = Study(workloads=[w], caps=(1300.0, 900.0)).run()
+    assert len(res) == 1 and res[0].cell == "schedule"
+    s = Study(workloads=[w], policies=("power-cap", {"cap_w": 400.0}),
+              caps=[900.0])
+    assert len(s) == 1 and s.scenarios()[0].cell == "replay"
+    # lists stay axes
+    assert len(Study(workloads=[w], caps=[1300.0, 900.0])) == 2
+
+
+def test_schedule_labels_are_distinct():
+    a, b = (1500.0, 1300.0, 700.0), (1500.0, 900.0, 700.0)
+    assert cap_label(a) != cap_label(b)
+    assert cap_label(a) == "sched(1500,1300,700)"
+
+
+def test_where_nan_never_satisfies_not_equal():
+    w = Workload.synthetic_jobs(30, seed=4)
+    res = Study(workloads=[w], policies=[None, "energy-aware"],
+                caps=[900.0]).run()
+    # project cells have NaN model_bias_pct; '!=' must not admit them
+    assert all(c.cell == "replay" for c in res.where("bias!=123"))
+
+
+def test_ndarray_caps_axis_is_a_cap_sweep():
+    """A numpy caps array is an axis of projection cells, matching what
+    project_batch(caps=ndarray) means — never one schedule cell."""
+    w = Workload.synthetic(2000, seed=6)
+    res = Study(workloads=[w], caps=np.array([1300.0, 900.0])).run()
+    assert len(res) == 2
+    assert all(c.cell == "project" for c in res)
+    # numpy scalars inside a list axis are single caps too
+    res = Study(workloads=[w], caps=list(np.arange(900, 1400, 200))).run()
+    assert [c.cell for c in res] == ["project"] * 3
+    assert Scenario(w, cap=np.int64(900)).cell == "project"
+
+
+def test_schedule_cells_share_one_report_per_group(monkeypatch):
+    """Chip-axis schedule cells under ONE explicit tables object must run
+    one class_cap_report, not one per chip."""
+    from repro.power import fleet as fleet_mod
+    calls = []
+    real = fleet_mod.jobs_mod.class_cap_report
+
+    def counting(*a, **k):
+        calls.append(1)
+        return real(*a, **k)
+
+    monkeypatch.setattr(fleet_mod.jobs_mod, "class_cap_report", counting)
+    w = Workload.synthetic_jobs(30, seed=7)
+    tables = response_table("tpu-v5e", kind="freq")
+    res = Study(workloads=[w], chips=["mi250x-gcd", "tpu-v5e"],
+                tables=tables, caps=(1300.0, 900.0)).run()
+    assert len(res) == 2
+    assert len(calls) == 1
+    assert res[0].savings_pct == res[1].savings_pct
+
+
+def test_scenarios_kwarg_rejects_shadowed_axes_and_knobs():
+    cells = [Scenario(Workload.paper_fleet(), cap=900.0)]
+    with pytest.raises(ValueError, match="not both"):
+        Study(scenarios=cells, kind="power")
+    with pytest.raises(ValueError, match="not both"):
+        Study(scenarios=cells, tables="tpu-v5e")
+
+
+def test_readme_quickstart_snippet_runs():
+    """The documented first-contact flow must run verbatim-shaped: grid ->
+    project-cell pivot -> best -> schedule detail."""
+    study = Study(
+        workloads=[Workload.synthetic_jobs(60, seed=0)],
+        chips=["mi250x-gcd", "tpu-v5e"],
+        policies=[None, "energy-aware"],
+        caps=[1300.0, 900.0, (1500, 1300, 1100, 900, 700)],
+    )
+    res = study.run()
+    md = res.filter(cell="project").to_markdown(rows="cap", cols="chip")
+    assert "mi250x-gcd" in md and "tpu-v5e" in md
+    assert res.best("dT<=20") is not None
+    from repro.power import FleetJobsReport
+    assert isinstance(res.filter(cell="schedule")[0].detail,
+                      FleetJobsReport)
+
+
+def test_empty_axis_raises():
+    w = Workload.synthetic_jobs(30, seed=5)
+    with pytest.raises(ValueError, match="caps axis is empty"):
+        Study(workloads=[w], caps=[])
+    with pytest.raises(ValueError, match="chips axis is empty"):
+        Study(workloads=[w], chips=[], caps=[900.0])
+
+
+def test_study_axis_validation():
+    with pytest.raises(ValueError, match="workloads axis"):
+        Study()
+    with pytest.raises(ValueError, match="kind"):
+        Study(workloads=[Workload.paper_fleet()], kind="volts")
+    with pytest.raises(ValueError, match="not both"):
+        Study(workloads=[Workload.paper_fleet()],
+              scenarios=[Scenario(Workload.paper_fleet(), cap=900)])
+    with pytest.raises(TypeError, match="re-iterable|zero-arg"):
+        Workload.from_stream(iter([]))
+    with pytest.raises(ValueError, match="exactly one"):
+        Workload("w", MI250X_GCD)
+
+
+# ------------------------------------------------------------------- shims
+def test_project_domains_shim_parity():
+    fa = FleetAnalysis.synthetic(4000, seed=0).decompose()
+    doms = {"chm": (500.0, 2000.0), "phy": (800.0, 1500.0)}
+    with pytest.warns(DeprecationWarning, match="project_domains"):
+        old = fa.project_domains(doms, [1300.0, 900.0])
+    # the new spelling: one Study over from_energies workloads
+    e_total = fa.decomposition.total_energy_mwh
+    ws = [Workload.from_energies(ci, mi, e_total, name=n)
+          for n, (ci, mi) in doms.items()]
+    res = Study(workloads=ws, caps=[1300.0, 900.0]).run()
+    for name, rows in old.items():
+        cells = res.filter(workload=name)
+        assert [c.detail for c in cells] == rows
+
+
+def test_replay_projection_kwargs_shim_parity():
+    powers = synth_fleet_powers(3000, seed=11)
+    from repro.power.stream import iter_array
+    tables = response_table("tpu-v5e", kind="freq")
+    with pytest.warns(DeprecationWarning, match="replay"):
+        old = replay(iter_array(powers, 1024), "energy-aware",
+                     chip="tpu-v5e", record_chip=MI250X_GCD, tables=tables,
+                     caps=[900.0])
+    new = replay(iter_array(powers, 1024), "energy-aware", chip="tpu-v5e",
+                 record_chip=MI250X_GCD)
+    rows = new.project([900.0], "freq", tables=tables)
+    assert old.projection == rows
+    assert old.savings_pct == new.savings_pct
+
+
+# -------------------------------------------------------- public surface
+def test_public_surface_matches_all():
+    """`repro.power.__all__` is exactly what the package exports: no
+    phantom names, no unexported public names (catches drift as the
+    surface grows)."""
+    import repro.power as rp
+    exported = {n for n in vars(rp)
+                if not n.startswith("_")
+                and not inspect.ismodule(getattr(rp, n))}
+    assert exported == set(rp.__all__)
+    # and every __all__ name resolves (no stale strings)
+    for name in rp.__all__:
+        assert getattr(rp, name) is not None
+
+
+def test_builtin_tables_spelling_unchanged():
+    """The resolver's 'measured' spelling is the builtin tables."""
+    rows_none = project([900.0], "freq", tables=None)
+    rows_meas = project([900.0], "freq", tables=builtin_tables("freq"))
+    assert rows_none == rows_meas
+    assert isinstance(resolve_tables("tpu-v5e"), ResponseTables)
+
+
+def test_scenario_single_cell_run_is_study_of_one():
+    w = Workload.synthetic(2000, seed=4)
+    a = Scenario(w, cap=900.0).run()
+    b = Study(workloads=[w], caps=[900.0]).run()
+    assert isinstance(a, StudyResult) and len(a) == 1
+    assert a[0].detail == b[0].detail
