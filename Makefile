@@ -40,3 +40,4 @@ examples:
 	$(PYTHON) examples/cross_chip_projection.py
 	$(PYTHON) examples/streaming_replay.py
 	$(PYTHON) examples/scenario_study.py
+	$(PYTHON) examples/power_broker.py

@@ -1,0 +1,112 @@
+"""Online broker event loop at facility scale (CI-gated).
+
+The ISSUE 6 acceptance scale: a 10k-node / 50k-job month of cluster
+time must run through the event-driven simulator in well under 30 s
+(the committed baseline is 15 s; the CI gate fails at 2x that), with
+memory staying O(jobs x chunks) — the trace is columnar chunk
+summaries, never per-sample arrays. The per-tick reallocation is ONE
+batched TransferSurface pass over the whole running set x cap menu;
+the derived contract pins it at >=5x a per-job scalar loop of the same
+evaluation (the path an unvectorized broker would take)."""
+import time
+import tracemalloc
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.hardware import MI250X_GCD
+from repro.power import ChipModel, ClusterTrace, simulate_cluster
+
+N_JOBS = 50_000
+N_NODES = 10_000
+BUDGET_MW = 2.0
+ARRIVAL_GAP_S = 130.0        # ~75 days of arrivals, ~87% node utilization
+
+R_BATCH = 4_096              # running-set size for the realloc contract
+N_LOOP = 128
+MENU = np.array([np.inf, 500.0, 400.0, 300.0, 200.0])
+CHUNK_S = 900.0
+
+
+def _loop_realloc(chip, pa, caps) -> float:
+    """What an unvectorized broker pays: per job, per menu cap, a scalar
+    freq_for_power_cap + (time, power, energy) evaluation."""
+    acc = 0.0
+    for i in range(N_LOOP):
+        prof = pa.profile(i)
+        for cap in caps:
+            f = chip.freq_for_power_cap(prof, float(cap))
+            acc += chip.energy_j(prof, f) + chip.step_time(prof, f)
+    return acc
+
+
+def run(verbose: bool = False) -> List[Tuple[str, float, str]]:
+    trace = ClusterTrace.synthetic(N_JOBS, seed=0,
+                                   arrival_gap_s=ARRIVAL_GAP_S)
+
+    # ---- the event loop at acceptance scale (untraced: tracemalloc
+    # costs ~2x on the python-heavy heap loop and would gate noise, not
+    # the simulator)
+    t0 = time.perf_counter()
+    rep = simulate_cluster(trace, "greedy", BUDGET_MW, n_nodes=N_NODES,
+                           kind="power")
+    t_sim = time.perf_counter() - t0
+    assert rep.n_jobs == N_JOBS and not rep.budget_exceeded
+
+    # ---- memory contract at half scale: O(jobs x chunks) columns only,
+    # never per-sample arrays (a sample-materializing loop would be
+    # ~60x bigger: 38 MB of chunk columns vs GBs of samples)
+    half = ClusterTrace.synthetic(N_JOBS // 2, seed=0,
+                                  arrival_gap_s=ARRIVAL_GAP_S)
+    tracemalloc.start()
+    simulate_cluster(half, "greedy", BUDGET_MW, n_nodes=N_NODES,
+                     kind="power")
+    peak_mb = tracemalloc.get_traced_memory()[1] / 1e6
+    tracemalloc.stop()
+
+    # ---- batched realloc pass vs per-job scalar loop
+    chip = ChipModel(MI250X_GCD)
+    surf = chip.surface()
+    rng = np.random.default_rng(0)
+    powers = rng.uniform(220.0, 560.0, size=R_BATCH)
+    modes = np.where(powers > 420.0, 3, 2).astype(np.int32)
+    pa = surf.infer_profiles(powers, 1.0, CHUNK_S, modes)
+
+    t_batch = float("inf")
+    for _ in range(2):                       # best-of-2: stable CI gate
+        t0 = time.perf_counter()
+        f_cr = np.empty((MENU.size, R_BATCH))
+        f_cr[0] = 1.0
+        f_cr[1:] = surf.freq_for_power_cap(pa, MENU[1:, None])
+        d = surf.decisions_at(pa, f_cr)
+        float(np.asarray(d.energy_j).sum())
+        t_batch = min(t_batch, time.perf_counter() - t0)
+
+    t0 = time.perf_counter()
+    _loop_realloc(chip, pa, MENU[1:])
+    t_loop = time.perf_counter() - t0
+    speedup = (t_loop / N_LOOP) / (t_batch / R_BATCH)
+
+    if verbose:
+        print(f"\n# online broker, {N_JOBS} jobs / {N_NODES} nodes @ "
+              f"{BUDGET_MW} MW (greedy, kind=power)")
+        print(f"event loop: {t_sim:.1f} s ({rep.n_events} events, "
+              f"{rep.n_events / t_sim:.0f} events/s); peak alloc at "
+              f"{N_JOBS // 2} jobs: {peak_mb:.0f} MB")
+        print(f"  {rep}")
+        print(f"realloc pass ({R_BATCH} jobs x {MENU.size}-entry menu): "
+              f"batched {t_batch * 1e3:.1f} ms   scalar loop "
+              f"({N_LOOP} jobs): {t_loop * 1e3:.0f} ms   "
+              f"per-job speedup: {speedup:.1f}x")
+    return [
+        ("broker_sim_50k_jobs", t_sim * 1e6,
+         f"events={rep.n_events};peak_mb={peak_mb:.0f};"
+         f"savings_pct={rep.savings_pct:.2f}"),
+        ("broker_realloc_batched", t_batch * 1e6,
+         f"speedup_vs_loop={speedup:.1f}x;r={R_BATCH};menu={MENU.size}"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run(verbose=True):
+        print(",".join(str(x) for x in r))

@@ -16,10 +16,11 @@ def main(argv=None) -> None:
         if i + 1 >= len(argv):
             raise SystemExit("--json needs a PATH argument")
         json_path = argv[i + 1]
-    from benchmarks import (bench_fleet_jobs, bench_membw, bench_modal,
-                            bench_projection, bench_roofline_table,
-                            bench_scenarios, bench_stream, bench_surface,
-                            bench_train_step, bench_vai)
+    from benchmarks import (bench_broker, bench_fleet_jobs, bench_membw,
+                            bench_modal, bench_projection,
+                            bench_roofline_table, bench_scenarios,
+                            bench_stream, bench_surface, bench_train_step,
+                            bench_vai)
     suites = [
         ("vai", bench_vai),                  # Figs. 4/5, Table III
         ("membw", bench_membw),              # Fig. 6
@@ -29,6 +30,7 @@ def main(argv=None) -> None:
         ("fleet_jobs", bench_fleet_jobs),    # §V job-level, batched vs loop
         ("stream", bench_stream),            # chunked replay vs sample loop
         ("scenarios", bench_scenarios),      # study grid vs per-cell loop
+        ("broker", bench_broker),            # online event loop @ 50k jobs
         ("roofline", bench_roofline_table),  # §Roofline source
         ("train_step", bench_train_step),    # framework canary (slow)
     ]

@@ -74,15 +74,37 @@ class Decision:
                         / max(self.baseline_energy_j, 1e-12))
 
 
+SWEEP_OBJECTIVES: tuple = ("energy", "edp", "perf_per_watt")
+
+
 def sweep_decision(profile: StepProfile, chip: ChipModel,
                    slowdown_budget: float = 0.0, n_freqs: int = 11,
-                   power_cap_w: Optional[float] = None) -> Decision:
-    """The paper's frequency sweep as a pure function: minimize energy over
-    the grid subject to the slowdown budget (and optional power cap)."""
+                   power_cap_w: Optional[float] = None,
+                   objective: str = "energy") -> Decision:
+    """The paper's frequency sweep as a pure function: minimize the
+    ``objective`` over the grid subject to the slowdown budget (and
+    optional power cap). Objectives (the capping-metric axis of
+    arXiv:2505.21758): ``"energy"`` (the paper's sweep, default),
+    ``"edp"`` (energy-delay product ``E*t``), ``"perf_per_watt"``
+    (maximize work per watt-second, i.e. minimize ``t*P`` — identical to
+    ``E`` under this power model, kept as its own spelling for tables
+    whose measured E and t*P diverge)."""
+    if objective not in SWEEP_OBJECTIVES:
+        raise ValueError(f"unknown sweep objective {objective!r}; "
+                         f"known: {SWEEP_OBJECTIVES}")
     t0 = chip.step_time(profile, 1.0)
     e0 = chip.energy_j(profile, 1.0)
     budget = t0 * (1.0 + slowdown_budget)
+
+    def score(e: float, t: float, f: float) -> float:
+        if objective == "edp":
+            return e * t
+        if objective == "perf_per_watt":
+            return t * chip.power_w(profile, f)
+        return e
+
     best_f, best_e = 1.0, e0
+    best_s = score(e0, t0, 1.0)
     for f in chip.freq_grid(n_freqs):
         if power_cap_w is not None and chip.power_w(profile, f) > power_cap_w:
             continue
@@ -90,8 +112,9 @@ def sweep_decision(profile: StepProfile, chip: ChipModel,
         if t > budget * (1.0 + 1e-9):
             continue
         e = chip.energy_j(profile, f)
-        if e < best_e - 1e-12:
-            best_f, best_e = f, e
+        s = score(e, t, f)
+        if s < best_s - 1e-12:
+            best_f, best_e, best_s = f, e, s
     return Decision(
         freq_mhz=chip.freq_mhz(best_f), freq_frac=best_f,
         mode=chip.classify_mode(profile),

@@ -34,16 +34,27 @@ stream    — out-of-core telemetry: :class:`StreamingTelemetry` folds shard
             :func:`replay` re-runs a recorded trace under any policy/chip
             with one batched decision pass per chunk — policy x chip
             counterfactual sweeps at month scale, O(shard) memory
+broker    — the online fleet power broker: :func:`simulate_cluster` runs a
+            :class:`ClusterTrace` (jobs with arrivals / walltimes / node
+            counts, chunk-folded modal summaries) through an event-driven
+            10k-node cluster — FCFS + EASY-backfill placement, one batched
+            ``TransferSurface`` pass per telemetry chunk — while a broker
+            (``uniform`` / ``greedy`` / ``class-schedule`` / ``oracle`` /
+            any :class:`PowerPolicy` via :class:`PolicyBroker`) splits the
+            facility power budget across the running mix; the ``oracle``
+            pins the offline ``class_cap_report`` bound and
+            :class:`BrokerReport` puts throughput next to savings
 scenarios — the declarative what-if surface: a :class:`Scenario` names one
             grid cell (:class:`Workload` x chip x policy x cap x tables), a
             :class:`Study` expands axes into the cartesian grid and runs it
             batched (one decomposition per workload, one projection pass
-            per response surface, one chunked replay per policy x chip),
-            returning a columnar :class:`StudyResult` with ``compare()`` /
-            ``best("dT<=0.5")`` / ``pivot()`` / ``to_markdown()``; every
-            ``tables=`` spelling resolves through one
-            :func:`resolve_tables`. The entry points above are single-cell
-            views of this engine
+            per response surface, one chunked replay per policy x chip,
+            one cluster simulation per broker x budget cell), returning a
+            columnar :class:`StudyResult` with ``compare()`` /
+            ``best("dT<=0.5")`` / ``pivot()`` / ``pareto()`` /
+            ``to_markdown()``; every ``tables=`` spelling resolves through
+            one :func:`resolve_tables`. The entry points above are
+            single-cell views of this engine
 
 Typical driver:
 
@@ -85,6 +96,10 @@ from repro.power.stream import (  # noqa: F401
     ReplayReport, SampleShard, StreamingModal, StreamingTelemetry,
     iter_array, iter_jobs, iter_jsonl, iter_npz, iter_store, replay,
     write_jsonl)
+from repro.power.broker import (  # noqa: F401
+    BROKERS, BrokerReport, BrokerView, ClassScheduleBroker, ClusterTrace,
+    GreedyValueBroker, OracleBroker, PolicyBroker, UniformBroker,
+    get_broker, simulate_cluster)
 from repro.power.scenarios import (  # noqa: F401
     CellResult, Scenario, Study, StudyResult, TablesLike, Workload,
     cap_label, resolve_tables)
@@ -116,6 +131,10 @@ __all__ = [
     "ReplayReport", "SampleShard", "StreamingModal", "StreamingTelemetry",
     "iter_array", "iter_jobs", "iter_jsonl", "iter_npz", "iter_store",
     "replay", "write_jsonl",
+    # online fleet power broker (event-driven cluster simulation)
+    "BROKERS", "BrokerReport", "BrokerView", "ClassScheduleBroker",
+    "ClusterTrace", "GreedyValueBroker", "OracleBroker", "PolicyBroker",
+    "UniformBroker", "get_broker", "simulate_cluster",
     # declarative scenario studies (the grid surface over everything above)
     "CellResult", "Scenario", "Study", "StudyResult", "TablesLike",
     "Workload", "cap_label", "resolve_tables",

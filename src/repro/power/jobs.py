@@ -79,6 +79,18 @@ class JobTrace:
         return float(self.powers.size) * self.sample_interval_s
 
     @property
+    def arrival_s(self) -> float:
+        """Submission time (s since trace start) — scheduler-facing alias
+        of ``begin_time`` for the online broker's arrival queue."""
+        return float(self.begin_time)
+
+    @property
+    def walltime_s(self) -> float:
+        """Requested/observed walltime (s) — the nominal (uncapped) run
+        length; equals ``duration_s`` for recorded traces."""
+        return self.duration_s
+
+    @property
     def energy_mwh(self) -> float:
         return float(np.sum(self.powers)) * self.sample_interval_s \
             / 3600.0 / 1e6
@@ -122,6 +134,13 @@ class JobTable:
         for j, t in enumerate(self.traces):
             self.powers[j, :lens[j]] = t.powers
             self.mask[j, :lens[j]] = True
+        # scheduler-facing columns (the online broker's arrival queue +
+        # node-pool placement read these, never the trace objects)
+        self.arrival_s = np.array([t.arrival_s for t in self.traces],
+                                  dtype=np.float64)
+        self.walltime_s = lens.astype(np.float64) * self.sample_interval_s
+        self.nodes = np.array([max(int(t.num_nodes), 1)
+                               for t in self.traces], dtype=np.int64)
 
     def __len__(self) -> int:
         return len(self.traces)
@@ -172,18 +191,22 @@ class JobTable:
                   sample_interval_s: float = 15.0,
                   class_mix: Optional[Dict[str, float]] = None,
                   mean_samples: int = 120, max_samples: int = 360,
-                  arrival_gap_s: float = 300.0) -> "JobTable":
+                  arrival_gap_s: float = 300.0,
+                  walltime_sigma: float = 0.6) -> "JobTable":
         """Synthetic multi-job workload: each job samples a model config
         from :mod:`repro.configs`, a node count from the paper's job-size
         classes and a duration/arrival time, then renders its power trace
         through :class:`ChipModel` (the config's roofline position bounds
         the achievable power; duty cycle fills the gap down to the fleet's
-        observed per-mode power bands)."""
+        observed per-mode power bands). Arrivals are Poisson
+        (``arrival_gap_s`` mean inter-arrival), walltimes lognormal with
+        shape ``walltime_sigma`` (heavy-tailed, clipped to
+        ``max_samples``)."""
         return cls(synth_job_traces(
             n_jobs, seed=seed, chip=chip,
             sample_interval_s=sample_interval_s, class_mix=class_mix,
             mean_samples=mean_samples, max_samples=max_samples,
-            arrival_gap_s=arrival_gap_s),
+            arrival_gap_s=arrival_gap_s, walltime_sigma=walltime_sigma),
             chip=chip, sample_interval_s=sample_interval_s)
 
 
@@ -276,7 +299,8 @@ def synth_job_traces(n_jobs: int, seed: int = 0,
                      sample_interval_s: float = 15.0,
                      class_mix: Optional[Dict[str, float]] = None,
                      mean_samples: int = 120, max_samples: int = 360,
-                     arrival_gap_s: float = 300.0) -> List[JobTrace]:
+                     arrival_gap_s: float = 300.0,
+                     walltime_sigma: float = 0.6) -> List[JobTrace]:
     rng = np.random.default_rng(seed)
     mix = class_mix or CLASS_MIX
     classes = list(mix)
@@ -297,8 +321,8 @@ def synth_job_traces(n_jobs: int, seed: int = 0,
         size = size_names[rng.choice(len(size_names), p=p_size)]
         lo, hi, _ = JOB_SIZE_CLASSES[size]
         nodes = int(rng.integers(lo, hi + 1))
-        n = int(np.clip(rng.lognormal(np.log(mean_samples), 0.6), 6,
-                        max_samples))
+        n = int(np.clip(rng.lognormal(np.log(mean_samples), walltime_sigma),
+                        6, max_samples))
         # phase split: startup/teardown/io bookends around the main phase
         n_setup = max(1, int(n * rng.uniform(0.08, 0.22)))
         n_main = max(1, n - n_setup)

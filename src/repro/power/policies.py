@@ -18,7 +18,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional, Protocol, Union, runtime_checkable
 
-from repro.core.governor import Decision, sweep_decision
+from repro.core.governor import (Decision, SWEEP_OBJECTIVES,
+                                 sweep_decision)
 from repro.core.power_model import ChipModel, StepProfile
 from repro.power.surface import BatchDecision, ProfileArray, ProfilesLike
 
@@ -116,28 +117,36 @@ class EnergyAwarePolicy:
     """The paper's per-step energy-minimizing sweep (today's
     ``PowerGovernor``) behind the policy protocol. Decisions are bit-for-bit
     those of ``PowerGovernor.choose`` — both call
-    :func:`repro.core.governor.sweep_decision`."""
+    :func:`repro.core.governor.sweep_decision`. ``objective`` swaps the
+    swept metric (``"energy"`` default / ``"edp"`` / ``"perf_per_watt"``,
+    the capping-metric axis of arXiv:2505.21758) on the same grid."""
 
     slowdown_budget: float = 0.0
     n_freqs: int = 11
     power_cap_w: Optional[float] = None
+    objective: str = "energy"
     name: str = field(default="energy-aware", init=False)
 
     def __post_init__(self):
         if self.n_freqs < 1:
             raise ValueError(f"n_freqs must be >= 1, got {self.n_freqs}")
+        if self.objective not in SWEEP_OBJECTIVES:
+            raise ValueError(f"unknown objective {self.objective!r}; "
+                             f"known: {SWEEP_OBJECTIVES}")
 
     def decide(self, profile: StepProfile, chip: ChipModel) -> Decision:
         return sweep_decision(profile, chip,
                               slowdown_budget=self.slowdown_budget,
                               n_freqs=self.n_freqs,
-                              power_cap_w=self.power_cap_w)
+                              power_cap_w=self.power_cap_w,
+                              objective=self.objective)
 
     def decide_batch(self, profiles: ProfilesLike,
                      chip: ChipModel) -> BatchDecision:
         return chip.surface().sweep_decisions(
             profiles, slowdown_budget=self.slowdown_budget,
-            n_freqs=self.n_freqs, power_cap_w=self.power_cap_w)
+            n_freqs=self.n_freqs, power_cap_w=self.power_cap_w,
+            objective=self.objective)
 
 
 def decide_batch(policy: PowerPolicy, profiles: ProfilesLike,
@@ -179,13 +188,15 @@ def _make_power_cap(cap_w: Optional[float] = None, **kw) -> PowerCapPolicy:
 
 def _make_energy_aware(slowdown_budget: float = 0.0, n_freqs: int = 11,
                        power_cap_w: Optional[float] = None,
-                       cap_w: Optional[float] = None, **kw
+                       cap_w: Optional[float] = None,
+                       objective: str = "energy", **kw
                        ) -> EnergyAwarePolicy:
     # cap_w is the shared driver knob (same flag drives "power-cap")
     if power_cap_w is None:
         power_cap_w = cap_w
     return EnergyAwarePolicy(slowdown_budget=slowdown_budget,
-                             n_freqs=n_freqs, power_cap_w=power_cap_w)
+                             n_freqs=n_freqs, power_cap_w=power_cap_w,
+                             objective=objective)
 
 
 POLICIES: Dict[str, Callable[..., PowerPolicy]] = {

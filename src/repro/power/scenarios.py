@@ -26,6 +26,13 @@ module is the consolidation:
                            projection rows of the recorded trace)
   ===========  ==========  ==============================================
 
+* broker cells (``Study(brokers=[...], budgets_mw=[...])``) — the online
+  counterpart: each cell is one :func:`~repro.power.broker.simulate_cluster`
+  run of the workload's cached :class:`~repro.power.broker.ClusterTrace`
+  under a budgeted broker, reported with throughput next to savings;
+  :meth:`StudyResult.pareto` extracts the throughput-vs-savings frontier
+  and the ``"oracle"`` broker pins the offline ``class_cap_report`` bound
+  in the same grid;
 * :class:`Study` — axes (lists per dimension) expanded into the cartesian
   grid and executed **batched**: one modal decomposition per workload, one
   ``project_batch`` pass per (workload, tables, kind) over the union of the
@@ -175,6 +182,7 @@ class Workload:
         self._stream_factory = stream_factory
         self._energies_src = energies
         self._fleet = None
+        self._cluster: Dict[int, Any] = {}
 
     def __repr__(self) -> str:
         return f"Workload({self.name!r}, chip={self.chip.name!r})"
@@ -325,13 +333,37 @@ class Workload:
             f"workload {self.name!r} carries modal energies only — replay "
             f"cells need a sample stream")
 
+    def cluster_trace(self, chunk_samples: int = 60):
+        """This workload's :class:`~repro.power.broker.ClusterTrace`
+        (cached per ``chunk_samples``) — what broker cells simulate.
+        Job-table workloads chunk-fold the table; stream workloads fold
+        the shard stream (arrivals from ``time_s`` stamps). Flat power
+        arrays / stores / bare energies carry no job structure."""
+        ct = self._cluster.get(chunk_samples)
+        if ct is None:
+            from repro.power.broker import ClusterTrace
+            if self._jobs is not None:
+                ct = ClusterTrace.from_jobs(self._jobs,
+                                            chunk_samples=chunk_samples)
+            elif self._stream_factory is not None:
+                ct = ClusterTrace.from_stream(
+                    self._stream_factory(), chip=self.chip,
+                    sample_interval_s=self.sample_interval_s,
+                    chunk_samples=chunk_samples)
+            else:
+                raise ValueError(
+                    f"workload {self.name!r} has no per-job structure — "
+                    f"broker cells need a JobTable or stream workload")
+            self._cluster[chunk_samples] = ct
+        return ct
+
 
 # ---------------------------------------------------------------------------
 # Scenario — one cell
 # ---------------------------------------------------------------------------
 CapLike = Union[None, float, int, Sequence[float]]
 
-PROJECT, SCHEDULE, REPLAY = "project", "schedule", "replay"
+PROJECT, SCHEDULE, REPLAY, BROKER = "project", "schedule", "replay", "broker"
 
 
 def _is_number(x) -> bool:
@@ -377,6 +409,9 @@ class Scenario:
     kind: str = "freq"
     tables: TablesLike = "auto"
     label: str = ""
+    broker: Any = None                   # a broker spec -> a "broker" cell
+    budget_mw: Optional[float] = None    # facility budget (None = unbounded)
+    n_nodes: int = 10_000                # broker cells: the node pool
 
     def resolved_chip(self) -> ChipSpec:
         return self.workload.chip if self.chip is None \
@@ -401,9 +436,20 @@ class Scenario:
             return [float(self.cap)]
         return [float(c) for c in self.cap]
 
+    def resolved_broker(self):
+        from repro.power.broker import get_broker
+        if isinstance(self.broker, tuple) and len(self.broker) == 2 \
+                and isinstance(self.broker[0], str) \
+                and isinstance(self.broker[1], dict):
+            name, knobs = self.broker
+            return get_broker(name, **dict(knobs))
+        return get_broker(self.broker)
+
     @property
     def cell(self) -> str:
-        """``"project"`` / ``"schedule"`` / ``"replay"``."""
+        """``"project"`` / ``"schedule"`` / ``"replay"`` / ``"broker"``."""
+        if self.broker is not None or self.budget_mw is not None:
+            return BROKER
         if self.policy is not None:
             return REPLAY
         if _is_number(self.cap):
@@ -447,6 +493,8 @@ class CellResult:
     detail: Any
     projection: Optional[List[ProjectionRow]] = None
     label: str = ""
+    budget_mw: float = float("nan")             # broker cells only
+    throughput_jobs_per_h: float = float("nan")  # broker cells only
 
     def to_dict(self) -> Dict:
         d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)
@@ -456,7 +504,8 @@ class CellResult:
 
 
 _METRICS = ("savings_pct", "dt_pct", "savings_mwh", "total_energy_mwh",
-            "savings_dt0_pct", "model_bias_pct")
+            "savings_dt0_pct", "model_bias_pct", "budget_mw",
+            "throughput_jobs_per_h")
 _INDEX = ("workload", "chip", "policy", "kind", "tables", "cell", "label")
 _ALIASES = {
     "dt": "dt_pct", "dT": "dt_pct", "slowdown": "dt_pct",
@@ -466,6 +515,8 @@ _ALIASES = {
     "bias": "model_bias_pct", "model_bias": "model_bias_pct",
     "mwh": "savings_mwh", "saved_mwh": "savings_mwh",
     "energy": "total_energy_mwh",
+    "budget": "budget_mw", "throughput": "throughput_jobs_per_h",
+    "jobs_per_h": "throughput_jobs_per_h",
 }
 _CONSTRAINT_RE = re.compile(
     r"^\s*([A-Za-z_][A-Za-z0-9_]*)\s*(<=|>=|==|!=|<|>)\s*"
@@ -596,6 +647,34 @@ class StudyResult:
             order = order[::-1]
         return StudyResult([sub.cells[int(i)] for i in order])
 
+    def pareto(self, x: str = "throughput_jobs_per_h",
+               y: str = "savings_pct",
+               include_offline: bool = False) -> "StudyResult":
+        """The non-dominated frontier maximizing both metrics (default:
+        the throughput-vs-energy-savings front of a broker grid), sorted
+        by falling ``x``. A cell is dropped when another cell is >= on
+        both metrics and strictly better on one; NaN cells never make
+        the front. Offline cells (the oracle bound) are excluded unless
+        ``include_offline`` — a clairvoyant bound would otherwise swallow
+        the whole online frontier it exists to calibrate."""
+        xs = self.column(_metric_name(x))
+        ys = self.column(_metric_name(y))
+        ok = np.isfinite(xs) & np.isfinite(ys)
+        if not include_offline:
+            ok &= np.array([not getattr(c.detail, "offline", False)
+                            for c in self.cells], dtype=bool)
+        keep = []
+        for i in range(len(self.cells)):
+            if not ok[i]:
+                continue
+            dominated = np.any(
+                ok & (xs >= xs[i]) & (ys >= ys[i])
+                & ((xs > xs[i]) | (ys > ys[i])))
+            if not dominated:
+                keep.append(i)
+        keep.sort(key=lambda i: (-xs[i], -ys[i]))
+        return StudyResult([self.cells[i] for i in keep])
+
     # ----------------------------------------------------------- pivot views
     def pivot(self, rows: str = "cap", cols: str = "chip",
               value: str = "savings_pct"
@@ -703,16 +782,28 @@ class Study:
     explicitly empty axis raises rather than silently evaluating a
     ``None`` cell.
 
+    ``brokers`` / ``budgets_mw`` are the online axes: each combination is
+    one event-driven :func:`~repro.power.broker.simulate_cluster` run of
+    the workload's :meth:`~Workload.cluster_trace` (built once per
+    workload) on an ``n_nodes`` pool; a ``caps`` number/tuple then sets
+    the cap *menu* instead of spawning projection cells. Broker cells
+    evaluate on the workload's own chip and are a different cell shape
+    from replays, so ``brokers`` and ``policies`` axes are mutually
+    exclusive (a policy can still be an axis *value* of ``brokers`` — it
+    rides along as a :class:`~repro.power.broker.PolicyBroker`).
+
     Pass ``scenarios=[Scenario(...), ...]`` instead of axes for a
     non-cartesian grid.
     """
 
     def __init__(self, workloads=None, chips=None, policies=None, caps=None,
                  kind: str = "freq", tables: TablesLike = "auto",
+                 brokers=None, budgets_mw=None, n_nodes: int = 10_000,
                  scenarios: Optional[Sequence[Scenario]] = None):
         if scenarios is not None:
             if workloads is not None or chips is not None \
                     or policies is not None or caps is not None \
+                    or brokers is not None or budgets_mw is not None \
                     or kind != "freq" or tables != "auto":
                 raise ValueError(
                     "pass either axes or scenarios=, not both — with "
@@ -723,6 +814,16 @@ class Study:
             raise ValueError("Study needs at least a workloads axis")
         if kind not in ("freq", "power"):
             raise ValueError(f"kind must be 'freq' or 'power', got {kind!r}")
+        if brokers is not None or budgets_mw is not None:
+            if policies is not None:
+                raise ValueError(
+                    "brokers and policies are different cell shapes — run "
+                    "two studies, or pass a policy as a brokers= value "
+                    "(it becomes a PolicyBroker)")
+            if chips is not None:
+                raise ValueError(
+                    "broker cells evaluate on the workload's own chip "
+                    "(the trace was recorded there); drop the chips axis")
         # axes are LISTS; a tuple is a single axis VALUE wherever a tuple
         # already means something on its own — a cap schedule, a
         # (name, knobs) policy spec — so e.g. caps=(1300, 900) is ONE
@@ -733,13 +834,21 @@ class Study:
             else _aslist("caps", caps)
         pol_axis = [policies] if _is_policy_spec(policies) \
             else _aslist("policies", policies)
+        brk_axis = [brokers] if _is_policy_spec(brokers) \
+            else _aslist("brokers", brokers)
+        if isinstance(budgets_mw, np.ndarray):
+            budgets_mw = budgets_mw.tolist()
+        bud_axis = _aslist("budgets_mw", budgets_mw)
         self._scenarios = [
             Scenario(workload=w, chip=ch, policy=p, cap=c, kind=kind,
-                     tables=tables)
+                     tables=tables, broker=b, budget_mw=bud,
+                     n_nodes=n_nodes)
             for w in _aslist("workloads", workloads)
             for ch in _aslist("chips", chips)
             for p in pol_axis
-            for c in caps_axis]
+            for c in caps_axis
+            for b in brk_axis
+            for bud in bud_axis]
 
     def scenarios(self) -> List[Scenario]:
         return list(self._scenarios)
@@ -807,7 +916,23 @@ class Study:
                         policy=_policy_label(policy), cap=s.cap,
                         kind=s.kind, tables=_tables_source(tables),
                         label=s.label)
-            if s.cell == PROJECT:
+            if s.cell == BROKER:
+                from repro.power.broker import simulate_cluster
+                rep = simulate_cluster(
+                    s.workload.cluster_trace(), s.resolved_broker(),
+                    s.budget_mw, n_nodes=s.n_nodes, kind=s.kind,
+                    caps=s.caps_list(), tables=tables)
+                base["policy"] = rep.broker      # the broker names the row
+                out.append(CellResult(
+                    cell=BROKER, savings_pct=rep.savings_pct,
+                    dt_pct=rep.dt_pct, savings_mwh=rep.savings_mwh,
+                    total_energy_mwh=rep.baseline_mwh,
+                    savings_dt0_pct=float("nan"),
+                    model_bias_pct=float("nan"),
+                    budget_mw=rep.budget_mw,
+                    throughput_jobs_per_h=rep.throughput_jobs_per_h,
+                    detail=rep, **base))
+            elif s.cell == PROJECT:
                 row = proj_rows[(id(s.workload), id(tables), s.kind)][
                     float(s.cap)]
                 _, _, e_tot = s.workload.energies_mwh()

@@ -73,6 +73,7 @@ class SampleShard:
     energy_j: np.ndarray                    # (n,) float64
     mode: Optional[np.ndarray] = None       # (n,) int, 1..4
     freq_mhz: Optional[np.ndarray] = None   # (n,) float64
+    time_s: Optional[np.ndarray] = None     # (n,) float64 wall-clock stamps
 
     def __len__(self) -> int:
         return int(self.power_w.size)
@@ -81,7 +82,8 @@ class SampleShard:
     def from_arrays(cls, power_w, job_id: Union[str, np.ndarray] = "job0",
                     duration_s=None, energy_j=None, mode=None,
                     freq_mhz=None,
-                    sample_interval_s: float = 15.0) -> "SampleShard":
+                    sample_interval_s: float = 15.0,
+                    time_s=None) -> "SampleShard":
         p = np.asarray(power_w, dtype=np.float64).ravel()
         n = p.size
         jid = np.asarray(job_id)
@@ -98,13 +100,16 @@ class SampleShard:
             else np.asarray(mode, dtype=np.int64).ravel()
         fq = None if freq_mhz is None \
             else np.asarray(freq_mhz, dtype=np.float64).ravel()
+        ts = None if time_s is None \
+            else np.asarray(time_s, dtype=np.float64).ravel()
         for name, arr in (("job_id", jid), ("duration_s", dur),
                           ("energy_j", e), ("mode", md),
-                          ("freq_mhz", fq)):
+                          ("freq_mhz", fq), ("time_s", ts)):
             if arr is not None and arr.shape != (n,):
                 raise ValueError(f"shard field {name} has shape "
                                  f"{arr.shape}, expected ({n},)")
-        return cls(p, jid, dur, e if e is not None else p * dur, md, fq)
+        return cls(p, jid, dur, e if e is not None else p * dur, md, fq,
+                   ts)
 
     @classmethod
     def from_samples(cls, samples: Sequence[StepSample]) -> "SampleShard":
@@ -208,13 +213,18 @@ def iter_jobs(table, samples_per_shard: int = 65536
               ) -> Iterator[SampleShard]:
     """A :class:`repro.power.jobs.JobTable` as a job-ordered stream;
     shards pack multiple jobs and split long jobs mid-trace, exactly the
-    boundary conditions the parity suite exercises. (Also reachable as
-    ``table.to_stream()``.)"""
+    boundary conditions the parity suite exercises. Each shard carries
+    per-sample ``time_s`` stamps (job arrival + sample offset), so a
+    month-scale table round-trips its schedule through the stream —
+    :meth:`repro.power.broker.ClusterTrace.from_stream` rebuilds arrivals
+    from them. (Also reachable as ``table.to_stream()``.)"""
     if samples_per_shard < 1:
         raise ValueError(
             f"samples_per_shard must be >= 1, got {samples_per_shard}")
     buf_p: List[np.ndarray] = []
     buf_j: List[np.ndarray] = []
+    buf_t: List[np.ndarray] = []
+    dt = float(table.sample_interval_s)
     n = 0
     for t in table.traces:
         start = 0
@@ -225,17 +235,20 @@ def iter_jobs(table, samples_per_shard: int = 65536
             # no dtype=: np.full must size the unicode width from the value
             # (an explicit np.str_ collapses to '<U1' and truncates ids)
             buf_j.append(np.full(take, t.job_id))
+            buf_t.append(t.arrival_s
+                         + dt * np.arange(start, start + take,
+                                          dtype=np.float64))
             n += take
             start += take
             if n >= samples_per_shard:
                 yield SampleShard.from_arrays(
                     np.concatenate(buf_p), job_id=np.concatenate(buf_j),
-                    sample_interval_s=table.sample_interval_s)
-                buf_p, buf_j, n = [], [], 0
+                    sample_interval_s=dt, time_s=np.concatenate(buf_t))
+                buf_p, buf_j, buf_t, n = [], [], [], 0
     if n:
         yield SampleShard.from_arrays(
             np.concatenate(buf_p), job_id=np.concatenate(buf_j),
-            sample_interval_s=table.sample_interval_s)
+            sample_interval_s=dt, time_s=np.concatenate(buf_t))
 
 
 # ---------------------------------------------------------------------------

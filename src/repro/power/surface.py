@@ -363,27 +363,43 @@ class TransferSurface:
 
     def sweep_decisions(self, profiles: ProfilesLike,
                         slowdown_budget: float = 0.0, n_freqs: int = 11,
-                        power_cap_w: Optional[float] = None
-                        ) -> BatchDecision:
-        """The paper's energy-minimizing frequency sweep, vectorized over
-        the profile batch — bit-for-bit a Python loop of
+                        power_cap_w: Optional[float] = None,
+                        objective: str = "energy") -> BatchDecision:
+        """The paper's frequency sweep, vectorized over the profile batch —
+        bit-for-bit a Python loop of
         :func:`repro.core.governor.sweep_decision` (same grid, same
-        sequential accept rule with its 1e-12 improvement hysteresis)."""
+        sequential accept rule with its 1e-12 improvement hysteresis, same
+        ``objective`` spellings: energy / edp / perf_per_watt)."""
+        from repro.core.governor import SWEEP_OBJECTIVES
+        if objective not in SWEEP_OBJECTIVES:
+            raise ValueError(f"unknown sweep objective {objective!r}; "
+                             f"known: {SWEEP_OBJECTIVES}")
         xp = self.xp
         p = ProfileArray.coerce(profiles, xp)
         t0 = self.step_time(p, 1.0)
         e0 = self.energy_j(p, 1.0)
         budget = t0 * (1.0 + slowdown_budget)
+
+        def score(e, t, f):
+            if objective == "edp":
+                return e * t
+            if objective == "perf_per_watt":
+                return t * self.power_w(p, f)
+            return e
+
         best_f = xp.ones_like(t0)
         best_e = e0
+        best_s = score(e0, t0, 1.0)
         for f in self.chip.freq_grid(n_freqs):
             t = self.step_time(p, f)
             e = self.energy_j(p, f)
-            ok = (e < best_e - 1e-12) & (t <= budget * (1.0 + 1e-9))
+            s = score(e, t, f)
+            ok = (s < best_s - 1e-12) & (t <= budget * (1.0 + 1e-9))
             if power_cap_w is not None:
                 ok = ok & (self.power_w(p, f) <= power_cap_w)
             best_f = xp.where(ok, f, best_f)
             best_e = xp.where(ok, e, best_e)
+            best_s = xp.where(ok, s, best_s)
         mhz = xp.rint(best_f * self.spec.f_nominal_mhz).astype(int)
         return BatchDecision(
             freq_mhz=mhz, freq_frac=best_f,

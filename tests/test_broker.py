@@ -1,0 +1,300 @@
+"""`repro.power.broker`: the online fleet power broker.
+
+Load-bearing contracts:
+
+* the facility budget invariant is *structural* — whatever a broker
+  returns, the summed allocation never exceeds the budget at any event
+  (randomized over arrivals / budgets / brokers);
+* fixed seed => bit-identical simulation (the event loop is
+  deterministic: stable sorts, epoch-invalidated end events);
+* `OracleBroker` reproduces the offline `class_cap_report` aggregates
+  EXACTLY (same floats) — the online/offline comparison the subsystem
+  exists for — and no online broker ever beats it;
+* third-party scalar-only policies ride through `PolicyBroker` via the
+  shared `decide_batch` fallback;
+* the satellite knobs stay bit-for-bit at their defaults
+  (`walltime_sigma`, `objective="energy"`).
+"""
+import numpy as np
+import pytest
+from conftest import given, settings, st  # hypothesis, or skip-stubs
+
+from repro.core.governor import sweep_decision
+from repro.core.power_model import ChipModel, StepProfile
+from repro.power import (ClusterTrace, EnergyAwarePolicy, JobTable,
+                         MI250X_GCD, OracleBroker, PolicyBroker, Scenario,
+                         Study, Workload, class_cap_report, get_broker,
+                         simulate_cluster)
+
+CAPS = (500.0, 400.0, 300.0, 200.0)
+
+
+def small_trace(seed=0, n=120, **kw):
+    return ClusterTrace.from_jobs(JobTable.synthetic(n, seed=seed), **kw)
+
+
+# ---------------------------------------------------------------------------
+# ClusterTrace construction
+# ---------------------------------------------------------------------------
+def test_trace_columns_and_energy():
+    t = JobTable.synthetic(60, seed=1)
+    tr = ClusterTrace.from_jobs(t)
+    assert tr.n_jobs == 60
+    assert tr.arrival_s.shape == tr.walltime_s.shape == (60,)
+    assert np.all(np.diff(np.sort(tr.arrival_s)) >= 0)
+    # node-weighted energy = nodes * per-GCD trace energy
+    w = t.nodes.astype(float)
+    expect = float((t.decompose().total_energy_mwh * w).sum())
+    assert tr.total_energy_mwh == pytest.approx(expect, rel=1e-12)
+    # cumulative curves end at the decomp totals
+    assert tr.cum_e_tot[:, -1] == pytest.approx(
+        tr.decomp.total_energy_mwh, rel=1e-9)
+
+
+def test_trace_unweighted_is_bitforbit_table_decompose():
+    t = JobTable.synthetic(40, seed=2)
+    tr = ClusterTrace.from_jobs(t, node_weighted=False)
+    d = t.decompose()
+    assert np.array_equal(tr.decomp.energy_mwh, d.energy_mwh)
+    assert np.array_equal(tr.decomp.total_energy_mwh, d.total_energy_mwh)
+    assert np.array_equal(tr.chunk_power_w, tr.chunk_unit_power_w)
+
+
+def test_trace_from_stream_roundtrip():
+    t = JobTable.synthetic(25, seed=3)
+    via_stream = ClusterTrace.from_stream(
+        t.to_stream(), chip=t.chip, sample_interval_s=t.sample_interval_s)
+    direct = ClusterTrace.from_jobs(t, node_weighted=False)
+    assert via_stream.job_ids == direct.job_ids
+    # arrivals come from the shards' time_s stamps
+    assert np.allclose(via_stream.arrival_s, direct.arrival_s)
+    assert via_stream.total_energy_mwh == pytest.approx(
+        direct.total_energy_mwh, rel=1e-9)
+    assert np.allclose(via_stream.cum_e_tot[:, -1],
+                       direct.cum_e_tot[:, -1], rtol=1e-9)
+
+
+def test_trace_synthetic_vectorized_scale():
+    tr = ClusterTrace.synthetic(5000, seed=0)
+    assert tr.n_jobs == 5000
+    assert tr.chunk_power_w.shape[0] == 5000
+    assert np.all(tr.nodes >= 1)
+    assert tr.total_energy_mwh > 0
+
+
+# ---------------------------------------------------------------------------
+# The budget invariant (structural, randomized)
+# ---------------------------------------------------------------------------
+def check_invariant(seed, budget_mw, broker):
+    tr = small_trace(seed=seed, n=80)
+    rep = simulate_cluster(tr, broker, budget_mw, n_nodes=10_000,
+                           kind="power")
+    assert not rep.budget_exceeded
+    assert rep.peak_alloc_w <= budget_mw * 1e6 * (1.0 + 1e-6)
+    assert rep.n_jobs == 80
+    return rep
+
+
+@pytest.mark.parametrize("broker", ["uniform", "greedy", "class-schedule"])
+def test_budget_never_exceeded(broker):
+    for seed in (0, 1):
+        check_invariant(seed, 0.5, broker)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 50), budget=st.floats(0.05, 5.0),
+       broker=st.sampled_from(["uniform", "greedy", "class-schedule"]))
+def test_budget_invariant_randomized(seed, budget, broker):
+    check_invariant(seed, budget, broker)
+
+
+def test_overshooting_broker_is_clamped():
+    class Hog:
+        name = "hog"
+        offline = False
+
+        def allocate(self, view):
+            return np.zeros(view.n_running, dtype=np.int64)  # all uncapped
+
+    tr = small_trace(seed=4, n=60)
+    rep = simulate_cluster(tr, Hog(), 0.2, n_nodes=10_000, kind="power")
+    assert not rep.budget_exceeded
+    assert rep.n_scaled_events > 0          # the sim had to step in
+
+
+def test_bad_broker_shape_raises():
+    class Wrong:
+        name = "wrong"
+        offline = False
+
+        def allocate(self, view):
+            return np.zeros(view.n_running + 3, dtype=np.int64)
+
+    with pytest.raises(ValueError, match="shape"):
+        simulate_cluster(small_trace(n=40), Wrong(), 1.0, kind="power")
+
+
+# ---------------------------------------------------------------------------
+# Determinism
+# ---------------------------------------------------------------------------
+def test_fixed_seed_is_deterministic():
+    a = check_invariant(7, 0.4, "greedy")
+    b = check_invariant(7, 0.4, "greedy")
+    assert a.savings_mwh == b.savings_mwh
+    assert a.makespan_s == b.makespan_s
+    assert a.n_events == b.n_events
+    assert a.mean_wait_s == b.mean_wait_s
+    assert np.array_equal(a.bin_energy_mwh, b.bin_energy_mwh)
+    assert np.array_equal(a.bin_savings_mwh, b.bin_savings_mwh)
+
+
+# ---------------------------------------------------------------------------
+# Oracle = offline bound, exactly
+# ---------------------------------------------------------------------------
+def test_oracle_reproduces_class_cap_report_exactly():
+    tr = small_trace(seed=5, n=150)
+    rep = simulate_cluster(tr, "oracle", n_nodes=10_000, kind="power",
+                           caps=CAPS)
+    ref = class_cap_report(tr.decomp, caps=CAPS, kind="power")
+    assert rep.offline
+    assert rep.savings_mwh == ref.total_savings_mwh          # same floats
+    assert rep.savings_pct == ref.savings_pct
+    assert rep.schedule is not None
+    assert [c.cap for c in rep.schedule.classes] \
+        == [c.cap for c in ref.classes]
+
+
+def test_oracle_parity_holds_unweighted():
+    t = JobTable.synthetic(100, seed=6)
+    tr = ClusterTrace.from_jobs(t, node_weighted=False)
+    rep = simulate_cluster(tr, "oracle", n_nodes=10_000, kind="power",
+                           caps=CAPS)
+    ref = class_cap_report(t.decompose(), caps=CAPS, kind="power")
+    assert rep.savings_mwh == ref.total_savings_mwh
+
+
+@pytest.mark.parametrize("broker", ["uniform", "greedy", "class-schedule"])
+def test_online_never_beats_oracle(broker):
+    tr = small_trace(seed=8, n=150)
+    bound = simulate_cluster(tr, "oracle", n_nodes=10_000,
+                             kind="power").savings_mwh
+    for budget in (0.3, 1.0, None):
+        rep = simulate_cluster(tr, broker, budget, n_nodes=10_000,
+                               kind="power")
+        assert rep.savings_mwh <= bound + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Broker resolution + PolicyBroker fallback
+# ---------------------------------------------------------------------------
+def test_get_broker_resolution():
+    assert get_broker().name == "uniform"
+    assert get_broker("greedy", objective="edp").name == "greedy-edp"
+    o = OracleBroker()
+    assert get_broker(o) is o
+    with pytest.raises(KeyError, match="unknown broker"):
+        get_broker("nope")
+    with pytest.raises(TypeError):
+        get_broker(123)
+
+
+def test_policy_broker_third_party_scalar_fallback():
+    class ThirdParty:                       # decide() only, no decide_batch
+        name = "thirdparty"
+
+        def decide(self, profile: StepProfile, chip: ChipModel):
+            return sweep_decision(profile, chip, slowdown_budget=0.05)
+
+    br = get_broker(ThirdParty())
+    assert isinstance(br, PolicyBroker)
+    assert br.name == "policy:thirdparty"
+    tr = small_trace(seed=9, n=60)
+    rep = simulate_cluster(tr, ThirdParty(), 0.5, n_nodes=10_000,
+                           kind="power")
+    assert rep.broker == "policy:thirdparty"
+    assert not rep.budget_exceeded
+    assert rep.baseline_mwh > 0
+
+
+# ---------------------------------------------------------------------------
+# Study wiring: broker x budget axes, pareto front
+# ---------------------------------------------------------------------------
+def test_study_broker_grid_and_pareto():
+    w = Workload.synthetic_jobs(100, seed=10)
+    res = Study(workloads=[w], brokers=["uniform", "oracle"],
+                budgets_mw=[0.3, 1.0], kind="power").run()
+    assert len(res) == 4
+    assert all(c.cell == "broker" for c in res)
+    assert set(res.column("policy")) == {"uniform", "oracle"}
+    assert np.isfinite(res.column("throughput_jobs_per_h")).all()
+    assert np.isfinite(res.column("budget_mw")).all()
+    front = res.pareto()
+    assert len(front) >= 1                  # oracle excluded by default
+    assert all(c.policy != "oracle" for c in front)
+    assert any(c.policy == "oracle"
+               for c in res.pareto(include_offline=True))
+    # the trace is built once per workload, cached
+    assert w.cluster_trace() is w.cluster_trace()
+
+
+def test_study_broker_axis_validation():
+    w = Workload.synthetic_jobs(20, seed=0)
+    with pytest.raises(ValueError, match="different cell shapes"):
+        Study(workloads=[w], brokers=["uniform"], policies=["nominal"])
+    with pytest.raises(ValueError, match="workload's own chip"):
+        Study(workloads=[w], brokers=["uniform"], chips=["tpu-v5e"])
+    with pytest.raises(ValueError, match="no per-job structure"):
+        Scenario(workload=Workload.paper_fleet(), broker="uniform",
+                 kind="power").run()
+
+
+# ---------------------------------------------------------------------------
+# Satellites: default-knob parity
+# ---------------------------------------------------------------------------
+def test_walltime_sigma_default_bitforbit():
+    a = JobTable.synthetic(50, seed=11)
+    b = JobTable.synthetic(50, seed=11, walltime_sigma=0.6)
+    assert np.array_equal(a.powers, b.powers)
+    c = JobTable.synthetic(50, seed=11, walltime_sigma=0.1)
+    assert not np.array_equal(a.lengths, c.lengths)
+
+
+def test_objective_energy_is_bitforbit_default():
+    chip = ChipModel(MI250X_GCD)
+    rng = np.random.default_rng(12)
+    for _ in range(20):
+        prof = StepProfile(compute_s=float(rng.uniform(0.01, 1.0)),
+                           memory_s=float(rng.uniform(0.01, 1.0)))
+        d0 = sweep_decision(prof, chip, slowdown_budget=0.1)
+        d1 = sweep_decision(prof, chip, slowdown_budget=0.1,
+                            objective="energy")
+        assert d0.freq_frac == d1.freq_frac
+        assert d0.energy_j == d1.energy_j
+
+
+def test_objective_edp_diverges_and_batch_matches_scalar():
+    chip = ChipModel(MI250X_GCD)
+    profs = [StepProfile(compute_s=c, memory_s=m)
+             for c, m in [(1.0, 0.05), (0.05, 1.0), (0.6, 0.4)]]
+    pol = EnergyAwarePolicy(slowdown_budget=0.5, objective="edp")
+    bd = pol.decide_batch(profs, chip)
+    diverged = False
+    for i, p in enumerate(profs):
+        d = pol.decide(p, chip)
+        assert float(np.asarray(bd.freq_frac)[i]) \
+            == pytest.approx(d.freq_frac, rel=1e-12)
+        d_energy = sweep_decision(p, chip, slowdown_budget=0.5)
+        diverged |= d.freq_frac != d_energy.freq_frac
+    assert diverged                         # EDP actually changes a pick
+    with pytest.raises(ValueError, match="objective"):
+        EnergyAwarePolicy(objective="nope")
+    with pytest.raises(ValueError, match="objective"):
+        sweep_decision(profs[0], chip, objective="nope")
+
+
+def test_greedy_objective_knob_through_study_label():
+    tr = small_trace(seed=13, n=60)
+    rep = simulate_cluster(tr, "greedy", 0.5, kind="power",
+                           objective="perf_per_watt")
+    assert rep.broker == "greedy-perf_per_watt"
+    assert not rep.budget_exceeded
