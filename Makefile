@@ -2,7 +2,7 @@ PYTHON ?= python
 # src for the package, . so `benchmarks` imports as a package everywhere
 export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-power bench bench-fast examples validate-paper
+.PHONY: test test-fast test-power bench bench-fast examples validate-paper docs-check
 
 # Full suite — the tier-1 verification lane.
 test:
@@ -24,6 +24,11 @@ test-power:
 validate-paper:
 	$(PYTHON) -c "import repro.core.projection as p; raise SystemExit(p.validate_main())"
 
+# Execute every fenced ```python run snippet in README + docs/ in a fresh
+# subprocess — documented examples can't silently rot. CI fast lane.
+docs-check:
+	$(PYTHON) tools/run_doc_snippets.py README.md docs/ARCHITECTURE.md docs/BACKENDS.md
+
 bench:
 	$(PYTHON) benchmarks/run.py --quiet
 
@@ -41,3 +46,4 @@ examples:
 	$(PYTHON) examples/streaming_replay.py
 	$(PYTHON) examples/scenario_study.py
 	$(PYTHON) examples/power_broker.py
+	$(PYTHON) examples/sharded_study.py

@@ -1,3 +1,4 @@
+from repro.parallel.executor import ShardedExecutor  # noqa: F401
 from repro.parallel.sharding import (  # noqa: F401
     named_sharding_tree,
     zero1_specs,

@@ -12,12 +12,26 @@ from jax.sharding import PartitionSpec as P
 
 
 def named_sharding_tree(spec_tree: Any, mesh: Mesh) -> Any:
+    """Bind a pytree of :class:`PartitionSpec` leaves to ``mesh``,
+    producing the matching :class:`NamedSharding` tree.
+
+    The specs-as-data form (``P("shards")``, ``P()``, ...) is what
+    callers write and test against; jit's ``in_shardings=`` wants them
+    bound to a concrete mesh. ``is_leaf`` pins ``P`` itself as the leaf
+    type because a PartitionSpec is a tuple and ``tree.map`` would
+    otherwise descend into its axis names. Used by
+    :meth:`repro.parallel.ShardedExecutor._compile` for its kernel
+    argument shardings and by the distributed training-step tests.
+    """
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s),
         spec_tree, is_leaf=lambda x: isinstance(x, P))
 
 
 def _axis_size(mesh: Mesh, name) -> int:
+    """Device count behind one PartitionSpec entry: ``None`` (replicated)
+    counts 1, a tuple of axis names multiplies (e.g. ``("data", "pod")``
+    shards across both)."""
     if name is None:
         return 1
     if isinstance(name, (tuple, list)):
@@ -50,7 +64,15 @@ def zero1_specs(param_specs: Any, shapes: Any, mesh: Mesh,
 
 
 def spec_bytes_per_device(shapes: Any, specs: Any, mesh: Mesh) -> int:
-    """Static per-device bytes for a (ShapeDtypeStruct tree, spec tree)."""
+    """Static per-device bytes for a (ShapeDtypeStruct tree, spec tree).
+
+    Pure arithmetic over shapes — nothing is allocated, so this is the
+    planning tool for "will this sharding fit": each leaf contributes
+    ``size * itemsize`` divided by the product of the mesh-axis sizes
+    its spec shards over (replicated leaves divide by 1). Assumes every
+    sharded dimension divides evenly, which jit enforces at bind time
+    anyway; integer division floors the odd remainders.
+    """
     total = 0
     for shape, spec in zip(jax.tree.leaves(shapes),
                            jax.tree.leaves(

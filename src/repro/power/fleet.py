@@ -90,7 +90,8 @@ class FleetAnalysis:
     def from_stream(cls, stream, chip: ChipSpec = MI250X_GCD,
                     sample_interval_s: float = 15.0, bins: int = 120,
                     max_w: Optional[float] = None,
-                    track_jobs: bool = True) -> "FleetAnalysis":
+                    track_jobs: bool = True,
+                    executor=None) -> "FleetAnalysis":
         """Out-of-core constructor: fold an iterator of sample shards (see
         :mod:`repro.power.stream` — in-memory chunks, JSONL sample logs,
         ``TelemetryStore.spill_npz`` files, ``JobTable.to_stream()``)
@@ -100,11 +101,14 @@ class FleetAnalysis:
         give; only the raw ``powers`` array is absent, so the histogram is
         the streaming one (bins fixed at ingest). ``track_jobs=False``
         skips the per-job accumulators (halves ingest work) for flat
-        fleet-only analyses."""
+        fleet-only analyses. ``executor`` (a
+        :class:`repro.parallel.ShardedExecutor`) runs the fleet-scope
+        modal fold on a device mesh — same bits, see docs/BACKENDS.md."""
         from repro.power.stream import StreamingTelemetry
         return StreamingTelemetry(
             chip=chip, sample_interval_s=sample_interval_s, bins=bins,
-            max_w=max_w, track_jobs=track_jobs).extend(stream).fleet()
+            max_w=max_w, track_jobs=track_jobs,
+            executor=executor).extend(stream).fleet()
 
     def attach_stream(self, stream) -> "FleetAnalysis":
         """Back this analysis with finished streaming accumulators (a

@@ -799,7 +799,16 @@ class Study:
     def __init__(self, workloads=None, chips=None, policies=None, caps=None,
                  kind: str = "freq", tables: TablesLike = "auto",
                  brokers=None, budgets_mw=None, n_nodes: int = 10_000,
-                 scenarios: Optional[Sequence[Scenario]] = None):
+                 scenarios: Optional[Sequence[Scenario]] = None,
+                 executor=None, devices=None):
+        # executor/devices are execution knobs, not grid axes: replay
+        # cells run their per-shard infer/decide pass on the sharded jax
+        # backend (repro.parallel.ShardedExecutor), bit-for-bit the numpy
+        # result. devices=N is shorthand for ShardedExecutor(devices=N).
+        if executor is None and devices is not None:
+            from repro.parallel.executor import ShardedExecutor
+            executor = ShardedExecutor(devices=devices)
+        self._executor = executor
         if scenarios is not None:
             if workloads is not None or chips is not None \
                     or policies is not None or caps is not None \
@@ -904,7 +913,8 @@ class Study:
                 replay_reports[key] = replay(
                     s.workload.stream(), policy, chip=chip,
                     record_chip=s.workload.chip,
-                    sample_interval_s=s.workload.sample_interval_s)
+                    sample_interval_s=s.workload.sample_interval_s,
+                    executor=self._executor)
 
         out: List[CellResult] = []
         # schedule cells memoize too: cells differing only in axes the

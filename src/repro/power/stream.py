@@ -266,15 +266,19 @@ class _ModalAcc:
     bit-for-bit for any shard boundaries; ``counts`` are exact integers.
     """
 
-    __slots__ = ("carry", "counts", "n", "_buf_p", "_buf_m")
+    __slots__ = ("carry", "counts", "n", "_buf_p", "_buf_m", "_seg_fn")
 
-    def __init__(self) -> None:
+    def __init__(self, seg_fn=None) -> None:
         # row layout: one fold per mode's masked powers + one for the total
         self.carry = np.zeros(_N_MODES + 1, dtype=np.float64)
         self.counts = np.zeros(_N_MODES, dtype=np.int64)
         self.n = 0
         self._buf_p = np.empty(0, dtype=np.float64)
         self._buf_m = np.empty(0, dtype=np.int64)
+        # optional drop-in segment reducer (same (modes+1, nseg) layout,
+        # same per-segment bits) — ShardedExecutor.segment_sums plugs in
+        # here to run the masked sums on the device mesh
+        self._seg_fn = seg_fn
 
     @staticmethod
     def _contrib(p: np.ndarray, modes: np.ndarray) -> np.ndarray:
@@ -294,8 +298,11 @@ class _ModalAcc:
         modes = np.concatenate([self._buf_m, modes])
         k = (p.size // SEG) * SEG
         if k:
-            seg = self._contrib(p[:k], modes[:k]) \
-                .reshape(_N_MODES + 1, -1, SEG).sum(axis=-1)
+            if self._seg_fn is not None:
+                seg = self._seg_fn(p[:k], modes[:k])
+            else:
+                seg = self._contrib(p[:k], modes[:k]) \
+                    .reshape(_N_MODES + 1, -1, SEG).sum(axis=-1)
             block = np.concatenate([self.carry[:, None], seg], axis=1)
             self.carry = np.cumsum(block, axis=1)[:, -1]
         self._buf_p, self._buf_m = p[k:].copy(), modes[k:].copy()
@@ -322,29 +329,45 @@ class StreamingModal:
     may arrive in any number of separated runs)."""
 
     def __init__(self, chip: ChipSpec = MI250X_GCD,
-                 sample_interval_s: float = 15.0, track_jobs: bool = True):
+                 sample_interval_s: float = 15.0, track_jobs: bool = True,
+                 executor=None):
         self.chip = chip if isinstance(chip, ChipSpec) \
             else ChipModel(chip).spec
         self.sample_interval_s = float(sample_interval_s)
         self.track_jobs = track_jobs      # False: fleet scope only (replay's
-        self._fleet = _ModalAcc()         # recorded view skips the per-job
+        # the fleet-scope accumulator is the hot one — with a            #
+        # repro.parallel.ShardedExecutor its segment sums run on the     #
+        # device mesh (same bits); per-job scopes stay numpy (each job's #
+        # per-shard slice is small)                                      #
+        self._fleet = _ModalAcc(          # recorded view skips the per-job
+            seg_fn=executor.segment_sums if executor is not None else None)
         self._jobs: Dict[str, _ModalAcc] = {}    # fold it never reads)
 
     # ------------------------------------------------------------- folding
-    def fold(self, power_w: np.ndarray, job_id: np.ndarray) -> None:
+    def fold(self, power_w: np.ndarray, job_id: np.ndarray,
+             modes: Optional[np.ndarray] = None) -> None:
+        """Fold one chunk. ``modes`` lets a caller that already holds this
+        chip's power-band classification of ``power_w`` (replay's executor
+        path classifies on deduplicated values) pass it in instead of
+        classifying twice — it must equal ``classify_power(power_w,
+        self.chip)``; pass ``None`` to classify here."""
         p = np.asarray(power_w, dtype=np.float64)
         if p.size == 0:
             return
-        modes = classify_power(p, self.chip)
+        if modes is None:
+            modes = classify_power(p, self.chip)
         self._fleet.fold(p, modes)
         if not self.track_jobs:
             return
         jids = np.asarray(job_id)
-        uniq, first = np.unique(jids, return_index=True)
-        for jid in uniq[np.argsort(first)]:      # first-seen order
-            sel = jids == jid
-            self._jobs.setdefault(str(jid), _ModalAcc()).fold(p[sel],
-                                                              modes[sel])
+        # integer-code masks: `inv == k` is the same boolean mask as
+        # `jids == uniq[k]` at a fraction of the string-compare cost
+        uniq, first, inv = np.unique(jids, return_index=True,
+                                     return_inverse=True)
+        for k in np.argsort(first):              # first-seen order
+            sel = inv == k
+            self._jobs.setdefault(str(uniq[k]), _ModalAcc()).fold(
+                p[sel], modes[sel])
 
     # ------------------------------------------------------------ finalize
     @property
@@ -405,9 +428,11 @@ class StreamingTelemetry:
 
     def __init__(self, chip: ChipSpec = MI250X_GCD,
                  sample_interval_s: float = 15.0, bins: int = 120,
-                 max_w: Optional[float] = None, track_jobs: bool = True):
+                 max_w: Optional[float] = None, track_jobs: bool = True,
+                 executor=None):
         self.modal = StreamingModal(chip, sample_interval_s,
-                                    track_jobs=track_jobs)
+                                    track_jobs=track_jobs,
+                                    executor=executor)
         self.chip = self.modal.chip
         self.sample_interval_s = self.modal.sample_interval_s
         self.bins = int(bins)
@@ -593,7 +618,7 @@ def replay(stream: Iterable[ShardLike], policy: PolicyLike,
            chip=MI250X_GCD, *, record_chip=None,
            tables: Optional[ResponseTables] = None,
            caps: Optional[Sequence[float]] = None, kind: str = "freq",
-           sample_interval_s: float = 15.0, **policy_knobs
+           sample_interval_s: float = 15.0, executor=None, **policy_knobs
            ) -> ReplayReport:
     """Re-run a recorded telemetry stream under ``policy`` on ``chip`` —
     the single-cell view of a replay :class:`repro.power.Scenario`.
@@ -606,6 +631,15 @@ def replay(stream: Iterable[ShardLike], policy: PolicyLike,
     defaults to ``chip`` (same-chip what-if); pass the chip the trace was
     measured on for cross-chip replays.
 
+    ``executor``: a :class:`repro.parallel.ShardedExecutor` runs each
+    shard's infer + decide pass (and the recorded modal fold) jitted
+    across a device mesh — bit-for-bit the same report, several times
+    faster on wide meshes or quantized telemetry (docs/BACKENDS.md).
+    Cross-shard accumulation stays on the host in stream order, so shard
+    boundaries still never change the result. Policies the executor
+    doesn't support (:meth:`ShardedExecutor.supports`) silently use the
+    numpy path.
+
     ``tables`` / ``caps`` / ``kind`` (deprecated): attach the response-
     table projection of the recorded trace to the report. Call
     :meth:`ReplayReport.project` — or give the Scenario a ``cap`` — for
@@ -615,8 +649,9 @@ def replay(stream: Iterable[ShardLike], policy: PolicyLike,
     rec_model = ChipModel(record_chip) if record_chip is not None else model
     surf_rec = rec_model.surface()
     pol = get_policy(policy, **policy_knobs)
+    exec_decides = executor is not None and executor.supports(pol)
     rec_acc = StreamingModal(rec_model.spec, sample_interval_s,
-                             track_jobs=False)
+                             track_jobs=False, executor=executor)
 
     e_rec = e_base = e_new = t_rec = t_new = 0.0
     n = 0
@@ -629,20 +664,31 @@ def replay(stream: Iterable[ShardLike], policy: PolicyLike,
         sh = SampleShard.coerce(shard, sample_interval_s)
         if len(sh) == 0:
             continue
-        rec_acc.fold(sh.power_w, sh.job_id)
-        modes = sh.mode if sh.mode is not None \
-            else classify_power(sh.power_w, rec_model.spec)
         f = 1.0 if sh.freq_mhz is None else np.clip(
             sh.freq_mhz / rec_model.spec.f_nominal_mhz,
             rec_model.f_min_frac, 1.0)
-        profiles = surf_rec.infer_profiles(
-            sh.power_w, freq_frac=f, duration_s=sh.duration_s,
-            mode_idx=modes)
-        bd = decide_batch(pol, profiles, model)
-        be = np.asarray(bd.energy_j)
-        bb = np.asarray(bd.baseline_energy_j)
-        bt = np.asarray(bd.time_s)
-        bm = np.asarray(bd.mode_idx)
+        if exec_decides:
+            # mode_idx=None lets the executor classify on its
+            # deduplicated values; the classified modes come back for
+            # the recorded fold, so nothing classifies twice
+            be, bb, bt, bm, cmodes = executor.decide_shard(
+                pol, model, rec_model, sh.power_w, sh.mode,
+                sh.duration_s, f, modes_from_power=sh.mode is None,
+                return_modes=True)
+            rec_acc.fold(sh.power_w, sh.job_id,
+                         modes=cmodes if sh.mode is None else None)
+        else:
+            rec_acc.fold(sh.power_w, sh.job_id)
+            modes = sh.mode if sh.mode is not None \
+                else classify_power(sh.power_w, rec_model.spec)
+            profiles = surf_rec.infer_profiles(
+                sh.power_w, freq_frac=f, duration_s=sh.duration_s,
+                mode_idx=modes)
+            bd = decide_batch(pol, profiles, model)
+            be = np.asarray(bd.energy_j)
+            bb = np.asarray(bd.baseline_energy_j)
+            bt = np.asarray(bd.time_s)
+            bm = np.asarray(bd.mode_idx)
 
         e_rec += float(np.sum(sh.energy_j))
         e_base += float(np.sum(bb))
@@ -655,14 +701,35 @@ def replay(stream: Iterable[ShardLike], policy: PolicyLike,
             mode_e[i] += float(np.sum(be[sel]))
             mode_t[i] += float(np.sum(bt[sel]))
         jids = sh.job_id
-        uniq, first = np.unique(jids, return_index=True)
-        for jid in uniq[np.argsort(first)]:
-            sel = jids == jid
-            row = per_job.setdefault(str(jid), np.zeros(5))
+        # job-contiguous shards (every stream source emits them) reduce
+        # per run-slice: np.sum over the slice sees the same values in
+        # the same order as np.sum over the job's boolean take, so the
+        # bits match — at one vectorized != instead of a string sort
+        starts = np.flatnonzero(
+            np.concatenate(([True], jids[1:] != jids[:-1])))
+        run_ids = [str(j) for j in jids[starts]]
+        if len(set(run_ids)) == starts.size:
+            ends = np.append(starts[1:], len(sh))
+            for a, b, jid in zip(starts, ends, run_ids):
+                row = per_job.setdefault(jid, np.zeros(5))
+                row += [np.sum(sh.energy_j[a:b]), np.sum(bb[a:b]),
+                        np.sum(be[a:b]), np.sum(sh.duration_s[a:b]),
+                        np.sum(bt[a:b])]
+                job_n[jid] = job_n.get(jid, 0) + int(b - a)
+            continue
+        # a job re-appears mid-shard: integer-code masks (same booleans
+        # as `jids == uniq[k]`, no per-job string compare) keep the
+        # per-job sums bit-for-bit
+        uniq, first, inv = np.unique(jids, return_index=True,
+                                     return_inverse=True)
+        for k in np.argsort(first):
+            sel = inv == k
+            jid = str(uniq[k])
+            row = per_job.setdefault(jid, np.zeros(5))
             row += [np.sum(sh.energy_j[sel]), np.sum(bb[sel]),
                     np.sum(be[sel]), np.sum(sh.duration_s[sel]),
                     np.sum(bt[sel])]
-            job_n[str(jid)] = job_n.get(str(jid), 0) + int(sel.sum())
+            job_n[jid] = job_n.get(jid, 0) + int(sel.sum())
 
     replayed = ModalDecomposition(
         hours_pct={m.idx: float(100.0 * mode_t[i] / max(t_new, 1e-12))

@@ -25,9 +25,10 @@ Guarantees:
 * ``freq_for_power_cap`` is an argmax over the whole ``(profiles, grid)``
   power array instead of a per-frequency Python loop;
 * an optional ``jax.numpy`` backend (``backend="jax"``) so sweeps can be
-  ``jax.jit``-ed alongside the Pallas kernels.  The jax backend follows
-  jax's default dtype (float32 unless x64 is enabled), so it is numerically
-  close to — not bit-identical with — the float64 numpy backend.
+  ``jax.jit``-ed alongside the Pallas kernels — numerically close to, not
+  bit-identical with, the float64 numpy reference (docs/BACKENDS.md is
+  the backend-choice guide; the *bit-exact* jitted analysis path is
+  :class:`repro.parallel.ShardedExecutor`, a different contract).
 
 :func:`response_table` uses the surface to synthesize Table III-style
 ``(power %, runtime %, energy %)`` response columns for *any* registered

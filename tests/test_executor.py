@@ -1,0 +1,279 @@
+"""ShardedExecutor parity + speed-path suite.
+
+The tentpole contract: :func:`repro.power.stream.replay` and the
+streaming decompose must return **bit-for-bit identical** results with a
+:class:`repro.parallel.ShardedExecutor` attached — for every built-in
+policy, any shard boundaries, any mesh width, recorded modes/clocks
+present or absent, and across chips. Exact ``==``, no tolerance: the
+executor's jitted kernels are engineered to reproduce numpy's float64
+bits (docs/BACKENDS.md), and this suite is the enforcement.
+
+In-process tests run on the default single-device mesh (the parity
+recipe is width-independent); the 8-device mesh itself is exercised in a
+subprocess because ``--xla_force_host_platform_device_count`` must be
+set before jax first imports.
+"""
+import numpy as np
+import pytest
+from conftest import run_subprocess
+
+from repro.core.hardware import MI250X_GCD, TPU_V5E
+from repro.core.modal import classify_power, synth_fleet_powers
+from repro.parallel import ShardedExecutor
+from repro.power import ChipModel, FleetAnalysis
+from repro.power.policies import decide_batch, get_policy
+from repro.power.stream import SampleShard, iter_array, replay
+
+POLICIES = [
+    ("nominal", {}),
+    ("static", {"freq_mhz": 1200}),
+    ("power-cap", {"cap_w": 400.0}),
+    ("energy-aware", {"slowdown_budget": 0.05}),
+    ("energy-aware", {"slowdown_budget": 0.03, "objective": "edp"}),
+    ("energy-aware", {"slowdown_budget": 0.10,
+                      "objective": "perf_per_watt", "power_cap_w": 450.0}),
+]
+
+
+@pytest.fixture(scope="module")
+def ex():
+    # one executor for the whole module: the compile cache is keyed on
+    # kernel shape only (chips/caps/budgets ride as runtime scalars), so
+    # sharing it keeps the suite fast without sharing any results
+    return ShardedExecutor()
+
+
+def _quantized(n, seed=0):
+    return np.round(synth_fleet_powers(n, seed=seed) * 10.0) / 10.0
+
+
+def _shards(powers, jids, seed, n_cuts=13, **cols):
+    rng = np.random.default_rng(seed)
+    cuts = np.sort(rng.choice(np.arange(1, powers.size), size=n_cuts,
+                              replace=False))
+    prev = 0
+    for c in list(cuts) + [powers.size]:
+        yield SampleShard.from_arrays(
+            powers[prev:c], job_id=jids[prev:c],
+            **{k: v[prev:c] for k, v in cols.items() if v is not None})
+        prev = c
+
+
+def _assert_reports_identical(a, b):
+    assert a.energy_new_j == b.energy_new_j
+    assert a.energy_base_j == b.energy_base_j
+    assert a.energy_rec_j == b.energy_rec_j
+    assert a.time_new_s == b.time_new_s
+    assert a.time_rec_s == b.time_rec_s
+    assert a.recorded.energy_mwh == b.recorded.energy_mwh
+    assert a.recorded.hours_pct == b.recorded.hours_pct
+    assert a.replayed.energy_mwh == b.replayed.energy_mwh
+    assert a.replayed.hours_pct == b.replayed.hours_pct
+    assert [r.job_id for r in a.jobs] == [r.job_id for r in b.jobs]
+    for ra, rb in zip(a.jobs, b.jobs):
+        assert (ra.energy_new_j, ra.energy_base_j, ra.time_new_s,
+                ra.n_samples) == \
+               (rb.energy_new_j, rb.energy_base_j, rb.time_new_s,
+                rb.n_samples)
+
+
+def _jids(n, n_jobs=7):
+    return np.repeat([f"j{i:02d}" for i in range(n_jobs)],
+                     -(-n // n_jobs))[:n]
+
+
+# ------------------------------------------------------------ replay parity
+@pytest.mark.parametrize("policy,kw", POLICIES)
+def test_replay_bitexact_random_shards(policy, kw, ex):
+    powers = _quantized(20_000)
+    jids = _jids(powers.size)
+    a = replay(_shards(powers, jids, seed=3), policy,
+               chip="mi250x-gcd", **kw)
+    b = replay(_shards(powers, jids, seed=3), policy,
+               chip="mi250x-gcd", executor=ex, **kw)
+    _assert_reports_identical(a, b)
+
+
+@pytest.mark.parametrize("quantized", [True, False])
+@pytest.mark.parametrize("with_mode", [True, False])
+@pytest.mark.parametrize("with_freq", [True, False])
+def test_replay_bitexact_optional_columns(quantized, with_mode, with_freq,
+                                          ex):
+    n = 12_000
+    rng = np.random.default_rng(5)
+    powers = _quantized(n, seed=2) if quantized \
+        else synth_fleet_powers(n, seed=2)
+    jids = _jids(n)
+    mode = classify_power(powers, MI250X_GCD) if with_mode else None
+    freq = rng.choice([1100.0, 1400.0, 1700.0], size=n) if with_freq \
+        else None
+    args = dict(policy="energy-aware", chip=TPU_V5E,
+                record_chip=MI250X_GCD, slowdown_budget=0.05)
+    a = replay(_shards(powers, jids, seed=7, mode=mode, freq_mhz=freq),
+               **args)
+    b = replay(_shards(powers, jids, seed=7, mode=mode, freq_mhz=freq),
+               executor=ex, **args)
+    _assert_reports_identical(a, b)
+
+
+@pytest.mark.parametrize("dedup", ["auto", True, False])
+def test_replay_bitexact_dedup_modes(dedup):
+    powers = _quantized(9_000, seed=4)
+    jids = _jids(powers.size)
+    a = replay(iter_array(powers, 2048), "power-cap", chip="mi250x-gcd",
+               cap_w=420.0)
+    b = replay(iter_array(powers, 2048), "power-cap", chip="mi250x-gcd",
+               executor=ShardedExecutor(dedup=dedup), cap_w=420.0)
+    _assert_reports_identical(a, b)
+
+
+def test_unsupported_policy_falls_back(ex):
+    class WeirdPolicy:
+        name = "weird"
+        _inner = get_policy("nominal")
+
+        def decide(self, profile, chip):
+            return self._inner.decide(profile, chip)
+
+        def decide_batch(self, profiles, chip):
+            return self._inner.decide_batch(profiles, chip)
+
+    assert not ex.supports(WeirdPolicy())
+    powers = _quantized(4_000, seed=6)
+    a = replay(iter_array(powers, 1024), WeirdPolicy(), chip="mi250x-gcd")
+    b = replay(iter_array(powers, 1024), WeirdPolicy(), chip="mi250x-gcd",
+               executor=ex)
+    _assert_reports_identical(a, b)
+
+
+# ------------------------------------------------------- decision fast paths
+def test_memo_reuses_decisions_across_shards(ex):
+    powers = _quantized(40_000, seed=8)
+    pol = get_policy("energy-aware", slowdown_budget=0.05)
+    model = ChipModel(MI250X_GCD)
+    ref = None
+    calls = []
+    for _ in range(3):                       # identical shards: warm memo
+        before = ex.stats["kernel_calls"]
+        out = ex.decide_shard(pol, model, model, powers, None, 15.0, 1.0)
+        calls.append(ex.stats["kernel_calls"] - before)
+        if ref is None:
+            ref = out
+        for r, o in zip(ref, out):
+            assert np.array_equal(r, o)
+    assert calls[1] == calls[2] == 0         # warm shards: pure gathers
+    assert ex.stats["memo_hits"] >= 2
+
+
+def test_memo_bucket_collision_falls_back_exactly():
+    # 100.001 and 100.004 land in one bucket at both memo scales (0.1 W
+    # and 0.01 W); the executor must detect it and still match numpy
+    ex = ShardedExecutor()
+    powers = np.tile([100.001, 100.004, 350.25, 420.5], 2_000)
+    jids = _jids(powers.size)
+    a = replay(iter_array(powers, 4096), "energy-aware", chip="mi250x-gcd",
+               slowdown_budget=0.05)
+    b = replay(iter_array(powers, 4096), "energy-aware", chip="mi250x-gcd",
+               executor=ex, slowdown_budget=0.05)
+    _assert_reports_identical(a, b)
+    assert jids.size == powers.size          # trace is self-consistent
+
+
+def test_memo_distinguishes_chips_and_policies(ex):
+    powers = _quantized(8_192, seed=9)
+    mi, tpu = ChipModel(MI250X_GCD), ChipModel(TPU_V5E)
+    pol = get_policy("energy-aware", slowdown_budget=0.05)
+    out_mi = ex.decide_shard(pol, mi, mi, powers, None, 15.0, 1.0)
+    out_tpu = ex.decide_shard(pol, tpu, mi, powers, None, 15.0, 1.0)
+    assert not np.array_equal(out_mi[0], out_tpu[0])
+    surf = mi.surface()
+    prof = surf.infer_profiles(powers, 1.0, 15.0,
+                               classify_power(powers, MI250X_GCD))
+    for model, out in ((mi, out_mi), (tpu, out_tpu)):
+        bd = decide_batch(pol, prof, model)
+        assert np.array_equal(out[0], np.asarray(bd.energy_j))
+        assert np.array_equal(out[2], np.asarray(bd.time_s))
+
+
+# ------------------------------------------------------------- segment sums
+def test_segment_sums_matches_numpy_fold(ex):
+    from repro.power.stream import _ModalAcc
+    powers = synth_fleet_powers(128 * 37, seed=10)
+    modes = classify_power(powers, MI250X_GCD)
+    ref = _ModalAcc._contrib(powers, modes).reshape(5, -1, 128).sum(axis=-1)
+    got = ex.segment_sums(powers, modes)
+    assert np.array_equal(np.asarray(got), ref)
+
+
+def test_from_stream_with_executor_bitexact(ex):
+    powers = _quantized(16_000, seed=11)
+    jids = _jids(powers.size)
+    a = FleetAnalysis.from_stream(_shards(powers, jids, seed=12),
+                                  chip=MI250X_GCD)
+    b = FleetAnalysis.from_stream(_shards(powers, jids, seed=12),
+                                  chip=MI250X_GCD, executor=ex)
+    da = a.decompose().decomposition
+    db = b.decompose().decomposition
+    assert da.hours_pct == db.hours_pct
+    assert da.energy_mwh == db.energy_mwh
+    assert da.total_energy_mwh == db.total_energy_mwh
+
+
+# ------------------------------------------------------------ study wiring
+def test_study_devices_knob_builds_executor():
+    from repro.power.scenarios import Study, Workload
+    w = Workload("w", "mi250x-gcd", powers=_quantized(2_000, seed=13))
+    s = Study(workloads=[w], policies=["energy-aware"], devices=1)
+    assert isinstance(s._executor, ShardedExecutor)
+    assert s._executor.ndev == 1
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        ShardedExecutor(devices=4096)
+
+
+def test_study_results_bitexact_with_executor(ex):
+    from repro.power.scenarios import Study, Workload
+    w = Workload("w", "mi250x-gcd", powers=_quantized(10_000, seed=14))
+    axes = dict(workloads=[w], chips=["mi250x-gcd", "tpu-v5e"],
+                policies=[("energy-aware", {"slowdown_budget": 0.05}),
+                          ("power-cap", {"cap_w": 420.0})])
+    ra = Study(**axes).run()
+    rb = Study(**axes, executor=ex).run()
+    for ca, cb in zip(ra.cells, rb.cells):
+        assert (ca.workload, ca.chip, ca.policy) == \
+               (cb.workload, cb.chip, cb.policy)
+        assert ca.savings_pct == cb.savings_pct
+        assert ca.total_energy_mwh == cb.total_energy_mwh
+        assert ca.detail.energy_new_j == cb.detail.energy_new_j
+        assert ca.detail.time_new_s == cb.detail.time_new_s
+
+
+# ----------------------------------------------------------- 8-device mesh
+def test_eight_device_mesh_bitexact():
+    out = run_subprocess("""
+import numpy as np
+from repro.core.modal import synth_fleet_powers
+from repro.parallel import ShardedExecutor
+from repro.power.stream import SampleShard, replay
+
+n = 60_000
+powers = np.round(synth_fleet_powers(n, seed=0) * 10.0) / 10.0
+jids = np.repeat([f"j{i}" for i in range(5)], n // 5)
+
+def shards():
+    for a in range(0, n, 7777):
+        yield SampleShard.from_arrays(powers[a:a + 7777],
+                                      job_id=jids[a:a + 7777])
+
+ex = ShardedExecutor(devices=8)
+assert ex.ndev == 8
+kw = dict(chip="tpu-v5e", record_chip="mi250x-gcd", slowdown_budget=0.05)
+a = replay(shards(), "energy-aware", **kw)
+b = replay(shards(), "energy-aware", executor=ex, **kw)
+assert a.energy_new_j == b.energy_new_j
+assert a.time_new_s == b.time_new_s
+assert a.recorded.energy_mwh == b.recorded.energy_mwh
+assert a.replayed.hours_pct == b.replayed.hours_pct
+assert all(x.energy_new_j == y.energy_new_j for x, y in zip(a.jobs, b.jobs))
+print("OK8", ex.ndev)
+""", devices=8)
+    assert "OK8 8" in out

@@ -254,3 +254,31 @@ def test_fleet_analysis_domain_targeting():
     # half the fleet's modal energy -> half the fleet-wide projected savings
     full = fleet.project([900])[0].total_mwh
     assert out[0].savings_mwh == pytest.approx(full / 2, rel=1e-9)
+
+
+# ------------------------------------------------------- docs/public surface
+def test_readme_module_map_matches_package():
+    """The README module-map table must list exactly the repro.power
+    submodules (the drift this guards: broker/scenarios landed without
+    README rows), and every __all__ symbol must actually be exported."""
+    import importlib
+    import pkgutil
+    import re
+
+    import repro.power as pkg
+
+    for sym in pkg.__all__:
+        assert hasattr(pkg, sym), f"__all__ exports missing symbol {sym}"
+
+    readme = open(__file__.replace("tests/test_power_api.py",
+                                   "README.md")).read()
+    mapped = set(re.findall(r"^\|\s*`repro\.power\.(\w+)`", readme,
+                            flags=re.MULTILINE))
+    actual = {name for _, name, _ in pkgutil.iter_modules(pkg.__path__)}
+    assert mapped == actual, (
+        f"README module map out of sync with repro.power: "
+        f"missing rows {sorted(actual - mapped)}, "
+        f"stale rows {sorted(mapped - actual)}")
+    # every mapped module imports and contributes to the public surface
+    for name in sorted(mapped):
+        importlib.import_module(f"repro.power.{name}")
