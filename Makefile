@@ -47,3 +47,4 @@ examples:
 	$(PYTHON) examples/scenario_study.py
 	$(PYTHON) examples/power_broker.py
 	$(PYTHON) examples/sharded_study.py
+	$(PYTHON) examples/continuous_serving.py

@@ -1,0 +1,143 @@
+"""Continuous-batching serving vs the legacy blocking batch path (CI-gated).
+
+Open-loop Poisson arrivals, 1k+ synthetic requests with heterogeneous
+prompt lengths and long-tailed decode budgets, equal batch capacity on both
+sides (the slot pool size = the blocking batch size). The blocking path
+pays for every request twice over — right-padding to the batch-max prompt
+and lock-step decode to the batch-max budget — so the continuous engine
+must sustain >=3x useful tokens/s. The same run drives an energy-aware
+per-phase policy through the engine's EnergySession: deep caps on the
+memory-bound decode phase, nominal on compute-bound prefill, with measured
+savings at dT within the policy's own (zero) slowdown budget."""
+import dataclasses
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+N_REQ = 1024
+SLOTS = 128
+MAX_LEN = 160
+PROMPT_MAX = 16             # one prompt page: chat-style short prompts
+DECODE_MAX = 140            # the long tail that ruins lock-step batches
+RATE_PER_STEP = 64.0        # saturating load: the pool never starves
+
+
+def _requests():
+    from repro.serving import Request
+    rng = np.random.default_rng(0)
+    lens = rng.integers(4, PROMPT_MAX + 1, N_REQ)
+    lens[::SLOTS] = PROMPT_MAX
+    # long-tailed decode budgets: most requests finish in a handful of
+    # tokens, ~5% run long — exactly the mix where lock-step decode drags
+    # every short request to the batch max
+    budgets = 1 + np.minimum(rng.geometric(0.2, N_REQ), DECODE_MAX - 1)
+    long = rng.random(N_REQ) < 0.05
+    budgets[long] = rng.integers(80, DECODE_MAX + 1, int(long.sum()))
+    # pin the batch-max prompt/budget per blocking chunk: each chunk pads
+    # and lock-steps to the same shape, so the baseline compiles once and
+    # its cost is deterministic
+    budgets[::SLOTS] = DECODE_MAX
+    return [Request(rng.integers(1, 1024, int(l)).astype(np.int32),
+                    max_new_tokens=int(m))
+            for l, m in zip(lens, budgets)]
+
+
+def run(verbose: bool = False) -> List[Tuple[str, float, str]]:
+    import jax
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.models.transformer import Runtime
+    from repro.power import EnergySession
+    from repro.serving import (ContinuousEngine, Request, ServeEngine,
+                               poisson_arrivals, serve, serving_profiles)
+
+    # big enough that per-step compute dominates jax dispatch overhead,
+    # small enough for the CI lane
+    cfg = dataclasses.replace(
+        get_config("stablelm-12b").reduced(), d_model=128, n_layers=2,
+        n_heads=4, n_kv_heads=4, d_ff=512, vocab_size=1024, dtype="float32")
+    rt = Runtime(tp=1, moe_impl="local")
+    params, _ = M.init_params(cfg, rt, jax.random.PRNGKey(0))
+    reqs = _requests()
+    arrivals = poisson_arrivals(N_REQ, RATE_PER_STEP, seed=1)
+
+    # per-phase profiles come from the FULL model config: the reduced bench
+    # model is memory-bound everywhere, the production shape is the point
+    pre, dec = serving_profiles(get_config("stablelm-12b"), batch=SLOTS,
+                                prompt_len=512, context_len=2048)
+
+    # --- warm both paths (compiles) ---------------------------------------
+    eng = ContinuousEngine(cfg, rt, params, max_slots=SLOTS,
+                           max_len=MAX_LEN, prefill_profile=pre,
+                           decode_profile=dec)
+    warm = [Request(np.arange(1, l + 1, dtype=np.int32), max_new_tokens=2)
+            for l in (4, 9, PROMPT_MAX)]
+    serve(eng, warm)                       # compile pages + the step graph
+    blk = ServeEngine(cfg, rt, params, max_len=MAX_LEN)
+    blk.generate_blocking(
+        [Request(r.prompt, max_new_tokens=2) for r in reqs[:SLOTS]])
+
+    # the host is shared, so its speed drifts on the tens-of-seconds scale:
+    # bracket the continuous run between the two blocking halves so both
+    # paths sample the same machine conditions
+    def _blocking_half(chunks):
+        t0 = time.perf_counter()
+        for i in chunks:
+            blk.generate_blocking(reqs[i:i + SLOTS])
+        return time.perf_counter() - t0
+
+    starts = list(range(0, N_REQ, SLOTS))
+    t_block = _blocking_half(starts[::2])
+
+    sess = EnergySession(policy="energy-aware", slowdown_budget=0.0)
+    eng.session = sess
+    eng.n_prefills = eng.n_steps = 0
+    rep = serve(eng, reqs, arrivals=arrivals)
+    t_cont = rep.wall_s
+
+    t_block += _blocking_half(starts[1::2])
+
+    # useful tokens = what the requests asked for; the blocking path's
+    # batch-max over-generation is pure waste, not throughput
+    tokens = rep.tokens_out
+    tps_cont = tokens / t_cont
+    tps_block = tokens / t_block
+    speedup = t_block / t_cont
+
+    dt = sess.dt_pct()
+    phases = sess.phase_report()
+    assert dt <= 1e-6, f"per-phase policy broke its dT budget: {dt}"
+    assert len(phases) == 2, "expected distinct prefill/decode phases"
+    # the per-phase DVFS figure: how deep the policy capped the memory-bound
+    # decode mode (prefill stays at nominal, so the aggregate is diluted by
+    # 1024 prefill observations with zero headroom)
+    decode_mode = min(phases, key=lambda k: phases[k]["freq_mhz_mean"])
+    savings = phases[decode_mode]["savings_pct"]
+
+    if verbose:
+        print(f"\n# continuous batching, {N_REQ} requests x {SLOTS} slots "
+              f"(Poisson {RATE_PER_STEP}/step, prompts <= {PROMPT_MAX})")
+        print(f"continuous: {t_cont:.2f} s ({tps_cont:.0f} tok/s, "
+              f"{rep.n_steps} steps, occupancy {rep.occupancy_mean:.1f})")
+        print(f"blocking:   {t_block:.2f} s ({tps_block:.0f} tok/s)  ->  "
+              f"{speedup:.2f}x sustained tokens/s")
+        print(f"energy-aware per-phase: decode-phase savings {savings:.2f}% "
+              f"vs nominal at dT {dt:.4f}%")
+        for idx, ph in sorted(phases.items()):
+            print(f"  mode {idx}: {ph['steps']} steps @ "
+                  f"{ph['freq_mhz_mean']:.0f} MHz, "
+                  f"savings {ph['savings_pct']:.2f}%")
+    return [
+        ("serving_continuous_1k", t_cont * 1e6,
+         f"speedup_vs_blocking={speedup:.2f}x;tokens_per_s={tps_cont:.0f};"
+         f"decode_savings_pct={savings:.2f};dt_pct={dt:.4f};"
+         f"occupancy={rep.occupancy_mean:.1f};n_req={N_REQ};slots={SLOTS}"),
+        ("serving_blocking_1k", t_block * 1e6,
+         f"tokens_per_s={tps_block:.0f};n_req={N_REQ};slots={SLOTS}"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run(verbose=True):
+        print(",".join(str(x) for x in r))

@@ -19,8 +19,8 @@ def main(argv=None) -> None:
     from benchmarks import (bench_broker, bench_fleet_jobs, bench_membw,
                             bench_modal, bench_projection,
                             bench_roofline_table, bench_scenarios,
-                            bench_sharded, bench_stream, bench_surface,
-                            bench_train_step, bench_vai)
+                            bench_serving, bench_sharded, bench_stream,
+                            bench_surface, bench_train_step, bench_vai)
     suites = [
         ("vai", bench_vai),                  # Figs. 4/5, Table III
         ("membw", bench_membw),              # Fig. 6
@@ -33,6 +33,7 @@ def main(argv=None) -> None:
         ("scenarios", bench_scenarios),      # study grid vs per-cell loop
         ("broker", bench_broker),            # online event loop @ 50k jobs
         ("roofline", bench_roofline_table),  # §Roofline source
+        ("serving", bench_serving),          # continuous vs blocking decode
         ("train_step", bench_train_step),    # framework canary (slow)
     ]
     slow = {"train_step"}

@@ -316,39 +316,64 @@ def _dense_decode_attend(q: jax.Array, k: jax.Array, v: jax.Array,
     """Single-einsum decode attention: no kv-chunk scan, so a cache whose
     sequence dim is sharded over the model axis partitions cleanly (the
     softmax reductions over the sharded axis become psums — SPMD-friendly).
-    q: [B,1,Hq,Dk]; k/v: [B,S,Hkv,D*]."""
+    q: [B,1,Hq,Dk]; k/v: [B,S,Hkv,D*]; valid: scalar or per-sequence [B]."""
     B, S, Hkv, Dk = k.shape
     G = q.shape[2] // Hkv
     qg = q.reshape(B, 1, Hkv, G, Dk)
     s = jnp.einsum("bqhgd,bshd->bhgqs", qg, k,
                    preferred_element_type=jnp.float32) * scale
     kv_pos = jnp.arange(S, dtype=jnp.int32)
-    s = jnp.where((kv_pos < valid)[None, None, None, None], s, NEG_INF)
+    if jnp.ndim(valid) == 1:
+        mask = (kv_pos[None, :] < valid[:, None])[:, None, None, None, :]
+    else:
+        mask = (kv_pos < valid)[None, None, None, None]
+    s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgqs,bshd->bqhgd", p.astype(v.dtype), v)
     return out.reshape(B, 1, q.shape[2], v.shape[-1])
+
+
+def _batch_scatter(cache: jax.Array, new: jax.Array,
+                   slot: jax.Array) -> jax.Array:
+    """Per-sequence cache write: cache [B,S,...], new [B,1,...], slot [B]."""
+    return jax.vmap(
+        lambda c, u, s: jax.lax.dynamic_update_slice_in_dim(
+            c, u.astype(c.dtype), s, axis=0))(cache, new, slot)
 
 
 def decode_self_attention(p: Dict, cfg: ModelConfig, x: jax.Array,
                           cache: Dict, pos: jax.Array, window: int = 0,
                           use_rope: bool = True,
                           impl: str = "chunked") -> Tuple[jax.Array, Dict]:
-    """One-token decode. ``pos`` is the absolute position (scalar). Keys are
-    roped at write time; local attention uses a ring buffer of ``window``."""
+    """One-token decode. ``pos`` is the absolute position — a scalar for
+    lock-step batches, or a per-sequence ``[B]`` vector (slot-pool decode:
+    each sequence ropes, writes and masks at its own position, so batch-mates
+    of different lengths never see each other's padding). Keys are roped at
+    write time; local attention uses a ring buffer of ``window``."""
+    per_seq = pos.ndim == 1
     q, k, v = _qkv(p, x)                      # [B, 1, H(kv), hd]
     if use_rope:
-        posv = pos[None] if pos.ndim == 0 else pos
-        q = apply_rope(q, posv.astype(jnp.int32)[None, :], cfg.rope_theta)
-        k = apply_rope(k, posv.astype(jnp.int32)[None, :], cfg.rope_theta)
+        if per_seq:
+            posm = pos.astype(jnp.int32)[:, None]            # [B, 1]
+        else:
+            posv = pos[None] if pos.ndim == 0 else pos
+            posm = posv.astype(jnp.int32)[None, :]           # [1, 1]
+        q = apply_rope(q, posm, cfg.rope_theta)
+        k = apply_rope(k, posm, cfg.rope_theta)
     slots = cache["k"].shape[1]
     slot = (pos % slots).astype(jnp.int32)
-    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    if per_seq:
+        ck = _batch_scatter(cache["k"], k, slot)
+        cv = _batch_scatter(cache["v"], v, slot)
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
     # Ring semantics: every written slot is within the window by construction,
     # so masking only needs "slot has been written": slot_idx <= pos.
     valid = jnp.minimum(pos + 1, slots)
     scale = cfg.resolved_head_dim ** -0.5
-    if impl == "dense":
+    if impl == "dense" or per_seq:
+        # per-sequence valid lengths need the batched mask: dense only
         out = _dense_decode_attend(q, ck, cv, valid, scale)
     else:
         out = chunked_attention(q, ck, cv, causal=False, kv_valid_len=valid,
@@ -437,14 +462,24 @@ def mla_decode(p: Dict, cfg: ModelConfig, x: jax.Array, cache: Dict,
                pos: jax.Array) -> Tuple[jax.Array, Dict]:
     """Absorbed-matrix MLA decode: attention runs entirely in the latent
     space — the cache stores only (c_kv, k_rope) per token (the paper-scale
-    memory win of MLA)."""
-    posv = (pos[None] if pos.ndim == 0 else pos).astype(jnp.int32)[None, :]
-    q_nope, q_rope = _mla_q(p, cfg, x, posv)         # [B,1,H,*]
-    c_new, kr_new = _mla_latent(p, cfg, x, posv)     # [B,1,r], [B,1,rope]
-    ck = jax.lax.dynamic_update_slice_in_dim(
-        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
-    kr = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    memory win of MLA). ``pos`` is a scalar, or a per-sequence ``[B]``
+    vector for slot-pool decode."""
+    per_seq = pos.ndim == 1
+    if per_seq:
+        posm = pos.astype(jnp.int32)[:, None]                # [B, 1]
+    else:
+        posm = (pos[None] if pos.ndim == 0 else pos).astype(jnp.int32)[None, :]
+    q_nope, q_rope = _mla_q(p, cfg, x, posm)         # [B,1,H,*]
+    c_new, kr_new = _mla_latent(p, cfg, x, posm)     # [B,1,r], [B,1,rope]
+    if per_seq:
+        slot = pos.astype(jnp.int32)
+        ck = _batch_scatter(cache["c_kv"], c_new, slot)
+        kr = _batch_scatter(cache["k_rope"], kr_new, slot)
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+        kr = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
     # absorb W_uk into q: q_tilde = q_nope @ W_uk^T  -> latent space
     q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"])
     scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
@@ -453,7 +488,11 @@ def mla_decode(p: Dict, cfg: ModelConfig, x: jax.Array, cache: Dict,
     s = (jnp.einsum("bshr,btr->bhst", q_lat, ck.astype(q_lat.dtype))
          + jnp.einsum("bshk,btk->bhst", q_rope, kr.astype(q_rope.dtype)))
     s = (s.astype(jnp.float32) * scale)
-    s = jnp.where((kv_pos < valid)[None, None, None], s, NEG_INF)
+    if per_seq:
+        s = jnp.where((kv_pos[None, :] < valid[:, None])[:, None, None, :],
+                      s, NEG_INF)
+    else:
+        s = jnp.where((kv_pos < valid)[None, None, None], s, NEG_INF)
     a = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhst,btr->bshr", a.astype(ck.dtype), ck)
     out = jnp.einsum("bshr,rhk->bshk", o_lat, p["wv_b"])

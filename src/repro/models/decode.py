@@ -179,10 +179,26 @@ def _ring_from_kv(k: jax.Array, win: int) -> jax.Array:
     return jnp.take(k, pos, axis=1)
 
 
+#: families whose decode state is a position-indexed cache, so padding past a
+#: sequence's true length is recoverable (masked at read time). The recurrent
+#: families (ssm / hybrid) fold every prefill token into their state and
+#: cannot un-see pads.
+CAUSAL_CACHE_FAMILIES = ("dense", "moe", "vlm", "encdec")
+
+
 def prefill(cfg: ModelConfig, rt: Runtime, p: Dict, batch: Dict,
-            max_len: int) -> Tuple[jax.Array, Dict]:
+            max_len: int, lengths: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Dict]:
     """Run the prompt through the trunk, building the decode state.
-    Returns (last-token logits [B,1,V], state)."""
+    Returns (last-token logits [B,1,V], state).
+
+    ``lengths`` ([B] int32) gives each sequence's true prompt length within
+    the right-padded ``tokens``: logits are then read at position
+    ``lengths[b]-1`` per sequence instead of the batch max, so a short
+    prompt's first sampled token is independent of its batch-mates (causal
+    attention already keeps positions < length clean; the pad KV entries the
+    cache still holds are masked later by per-sequence decode positions).
+    Only meaningful for :data:`CAUSAL_CACHE_FAMILIES`."""
     tokens = batch["tokens"]
     B, S = tokens.shape
     M = max_len
@@ -312,7 +328,17 @@ def prefill(cfg: ModelConfig, rt: Runtime, p: Dict, batch: Dict,
     else:
         raise ValueError(cfg.family)
 
-    logits = model_mod.logits_fn(p, cfg, x[:, -1:])
+    if lengths is None:
+        x_last = x[:, -1:]
+    else:
+        if cfg.family not in CAUSAL_CACHE_FAMILIES:
+            raise ValueError(
+                f"per-sequence prefill lengths need a position-indexed "
+                f"cache; the recurrent state of family {cfg.family!r} "
+                f"absorbs pad tokens")
+        idx = (jnp.asarray(lengths, jnp.int32) - 1)[:, None, None]
+        x_last = jnp.take_along_axis(x, idx, axis=1)
+    logits = model_mod.logits_fn(p, cfg, x_last)
     return logits, state
 
 
@@ -321,8 +347,10 @@ def prefill(cfg: ModelConfig, rt: Runtime, p: Dict, batch: Dict,
 # ---------------------------------------------------------------------------
 def decode_step(cfg: ModelConfig, rt: Runtime, p: Dict, token: jax.Array,
                 pos: jax.Array, state: Dict) -> Tuple[jax.Array, Dict]:
-    """token: [B, 1] int32; pos: scalar int32 (next position to write).
-    Returns (logits [B,1,V], new state)."""
+    """token: [B, 1] int32; pos: next position to write — scalar int32 for
+    lock-step batches, or per-sequence [B] int32 for slot-pool decode
+    (:data:`CAUSAL_CACHE_FAMILIES` only: the recurrent families have no
+    position to index). Returns (logits [B,1,V], new state)."""
     x = model_mod.embed(p, cfg, token)
     pos = pos.astype(jnp.int32)
 

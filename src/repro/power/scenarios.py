@@ -215,6 +215,23 @@ class Workload:
         return cls(name, jobs.chip, jobs.sample_interval_s, jobs=jobs)
 
     @classmethod
+    def from_serving(cls, served, name: str = "serving") -> "Workload":
+        """A served trace — a :class:`repro.serving.ServeReport` (or any
+        engine/report exposing ``.session``) or the
+        :class:`~repro.power.EnergySession` itself. Snapshots the session's
+        telemetry against the session's own chip envelope, so serving
+        traffic (prefill/decode phase mix included) flows into the same
+        Study grids as fleet telemetry."""
+        session = getattr(served, "session", served)
+        if session is None or not hasattr(session, "telemetry"):
+            raise ValueError(
+                "from_serving needs a served trace whose engine recorded "
+                "into an EnergySession (pass session=EnergySession(...) "
+                "to the engine), or the session itself")
+        return cls.from_store(session.telemetry, chip=session.chip.spec,
+                              name=name)
+
+    @classmethod
     def from_stream(cls, stream_factory, chip=MI250X_GCD,
                     sample_interval_s: float = 15.0,
                     name: str = "stream") -> "Workload":

@@ -20,6 +20,8 @@ from __future__ import annotations
 import collections
 from typing import Deque, Optional, Sequence, Union
 
+import numpy as np
+
 from repro.core.governor import PowerActuator, Decision, SimulatedActuator
 from repro.core.hardware import ChipSpec, TPU_V5E
 from repro.core.power_model import ChipModel, StepProfile
@@ -57,6 +59,12 @@ class EnergySession:
         self.wall_s_total = 0.0
         self._energy_sum = 0.0
         self._baseline_energy_sum = 0.0
+        # per-phase (mode) accumulators: a serving engine feeds distinct
+        # prefill/decode profiles, and the question the paper asks is
+        # per-phase — how deep did the policy cap each mode, at what dT?
+        self._time_sum = 0.0
+        self._baseline_time_sum = 0.0
+        self._phase: dict = {}
         # running model-time clock: StepSample.t must be monotonic within
         # the job, so it accumulates each decision's step time (multiplying
         # the step index by the *current* step time drifts — and can go
@@ -64,9 +72,11 @@ class EnergySession:
         self._clock_s = 0.0
 
     # ------------------------------------------------------------- observe
-    def _record(self, step: int, d: Decision,
-                wall_s: Optional[float]) -> None:
-        """The single decision -> actuation -> telemetry write path."""
+    def _record(self, step: int, d: Decision, wall_s: Optional[float],
+                baseline_time_s: Optional[float] = None) -> None:
+        """The single decision -> actuation -> telemetry write path.
+        ``baseline_time_s`` is the step's nominal-frequency time
+        (``profile.total_s``), the denominator of the slowdown report."""
         self.actuator.apply(d.freq_mhz)
         self.telemetry.record(StepSample(
             step=step, t=self._clock_s, duration_s=d.time_s,
@@ -77,6 +87,21 @@ class EnergySession:
         self.steps += 1
         self._energy_sum += d.energy_j
         self._baseline_energy_sum += d.baseline_energy_j
+        bt = d.time_s if baseline_time_s is None else float(baseline_time_s)
+        self._time_sum += d.time_s
+        self._baseline_time_sum += bt
+        ph = self._phase.get(d.mode.idx)
+        if ph is None:
+            ph = self._phase[d.mode.idx] = {
+                "steps": 0, "time_s": 0.0, "baseline_time_s": 0.0,
+                "energy_j": 0.0, "baseline_energy_j": 0.0,
+                "freq_mhz_sum": 0.0}
+        ph["steps"] += 1
+        ph["time_s"] += d.time_s
+        ph["baseline_time_s"] += bt
+        ph["energy_j"] += d.energy_j
+        ph["baseline_energy_j"] += d.baseline_energy_j
+        ph["freq_mhz_sum"] += d.freq_mhz
         if wall_s is not None:
             self.wall_s_total += wall_s
 
@@ -90,7 +115,7 @@ class EnergySession:
         on real hardware the actuator/telemetry read the platform channel).
         """
         d = self.policy.decide(profile, self.chip)
-        self._record(step, d, wall_s)
+        self._record(step, d, wall_s, baseline_time_s=profile.total_s)
         return d
 
     def observe_many(self, profiles: Union[Sequence[StepProfile],
@@ -127,8 +152,15 @@ class EnergySession:
             if len(walls) != len(ds):
                 raise ValueError(
                     f"wall_s has {len(walls)} entries for {len(ds)} steps")
-        for i, (d, w) in enumerate(zip(ds, walls)):
-            self._record(start + i, d, w)
+        if isinstance(batch, ProfileArray):
+            bts = np.broadcast_to(np.maximum(np.maximum(
+                np.asarray(batch.compute_s), np.asarray(batch.memory_s)),
+                np.maximum(np.asarray(batch.collective_s), 1e-12)),
+                (len(ds),))
+        else:
+            bts = [p.total_s for p in batch]
+        for i, (d, w, bt) in enumerate(zip(ds, walls, bts)):
+            self._record(start + i, d, w, baseline_time_s=bt)
         return bd
 
     # ----------------------------------------------------------- lifecycle
@@ -159,6 +191,35 @@ class EnergySession:
             return 0.0
         return 100.0 * (1.0 - self._energy_sum / self._baseline_energy_sum)
 
+    def dt_pct(self) -> float:
+        """Aggregate slowdown vs the nominal-frequency baseline (the dT the
+        policy's decisions actually cost, model-time)."""
+        if self._baseline_time_sum <= 0:
+            return 0.0
+        return 100.0 * (self._time_sum / self._baseline_time_sum - 1.0)
+
+    def phase_report(self) -> dict:
+        """Per-mode decision summary, keyed by mode index: how deep the
+        policy capped each phase and at what cost. A serving engine's
+        prefill (compute-intensive) vs decode (memory-intensive) split lands
+        in different modes, so this is the per-phase DVFS story in one dict:
+        deep caps + savings on the decode mode, nominal on prefill."""
+        out = {}
+        for idx in sorted(self._phase):
+            ph = self._phase[idx]
+            be, bt = ph["baseline_energy_j"], ph["baseline_time_s"]
+            out[idx] = {
+                "steps": ph["steps"],
+                "freq_mhz_mean": ph["freq_mhz_sum"] / ph["steps"],
+                "time_s": ph["time_s"],
+                "energy_j": ph["energy_j"],
+                "savings_pct": (100.0 * (1.0 - ph["energy_j"] / be)
+                                if be > 0 else 0.0),
+                "dt_pct": (100.0 * (ph["time_s"] / bt - 1.0)
+                           if bt > 0 else 0.0),
+            }
+        return out
+
     def summary(self) -> dict:
         return {
             "policy": self.policy.name,
@@ -166,6 +227,7 @@ class EnergySession:
             "steps": self.steps,
             "energy_j": self.total_energy_j(),
             "savings_pct": self.savings_pct(),
+            "dt_pct": self.dt_pct(),
             "mode_hours_pct": self.mode_hours_pct(),
             "wall_s": self.wall_s_total,
         }

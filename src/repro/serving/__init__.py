@@ -1,1 +1,5 @@
-from repro.serving.engine import ServeEngine, Request  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    ContinuousEngine, Prefix, Request, ServeEngine, scale_profile,
+    serving_profiles)
+from repro.serving.scheduler import (  # noqa: F401
+    ServeReport, poisson_arrivals, serve)

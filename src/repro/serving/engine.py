@@ -1,27 +1,102 @@
-"""Batched serving engine: prefill + synchronized batched decode with KV /
-state caches, greedy or temperature sampling, and per-step energy telemetry
-through an :class:`repro.power.EnergySession` (decode is the paper's
-memory-intensive mode — the prime DVFS-savings regime)."""
+"""Serving engines: a slot-based continuous-batching engine plus the legacy
+blocking facade.
+
+:class:`ContinuousEngine` is the JetStream-style core — ``prefill(request)
+-> Prefix``, ``insert(prefix, slot)``, ``generate_step()`` — over a fixed
+pool of decode slots. Each slot carries its own KV rows, position, last
+token and sampling temperature inside donated jax buffers, so one jitted
+decode step advances every occupied slot with per-sequence position/length
+masking: no lock-step barrier, no right-padding beyond the prompt page, and
+a short prompt's continuation never depends on its batch-mates.
+
+The energy hook is the point (the paper's per-phase DVFS headroom): prefill
+is compute-bound, decode is memory-bound, and the engine reports each as its
+own roofline :class:`StepProfile` — derived from the model config through
+the chip model, not guessed — so any :class:`~repro.power.PowerPolicy`
+behind an :class:`~repro.power.EnergySession` caps the decode phase deep
+while leaving prefill at nominal.
+
+:class:`ServeEngine.generate` keeps its blocking signature as a
+compatibility wrapper: greedy calls on slot-capable families route through
+the continuous engine; everything else takes the lock-step path, which
+itself reads logits and decodes at per-sequence positions for the
+causal-cache families (closing the pad-as-context bug there too).
+"""
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.power import EnergySession, StepProfile
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import roofline
+from repro.core.hardware import ChipSpec, TPU_V5E
+from repro.power import ChipModel, EnergySession, StepProfile
 from repro.models import decode as decode_mod
 from repro.models.transformer import Runtime
 
+#: families the slot engine can serve: per-slot KV rows are scatter-written
+#: at per-sequence positions (MLA included — its latent cache is
+#: position-indexed too). vlm/encdec carry a shared frontend memory that is
+#: not per-slot; ssm/hybrid state absorbs pads.
+SLOT_FAMILIES = ("dense", "moe")
 
-def _wall_profile(wall_s: float) -> StepProfile:
-    """Decode-step roofline guess when no profile is supplied: HBM-bound
-    (decode streams the weights), wall-clock as the memory term."""
-    return StepProfile(compute_s=wall_s * 0.1, memory_s=wall_s)
+
+# ---------------------------------------------------------------------------
+# Roofline profiles for the two serving phases
+# ---------------------------------------------------------------------------
+def serving_profiles(cfg: ModelConfig, chip=TPU_V5E, batch: int = 8,
+                     prompt_len: int = 512, context_len: int = 2048,
+                     chips: int = 1) -> Tuple[StepProfile, StepProfile]:
+    """(prefill, decode) :class:`StepProfile` pair for this model on this
+    chip, from the analytic rooflines: FLOPs-per-step over peak for the
+    compute term, weights+cache bytes over HBM bandwidth for the memory
+    term. At production shapes prefill lands compute-bound and decode
+    memory-bound — the per-phase split every power policy feeds on."""
+    spec: ChipSpec = ChipModel(chip).spec
+    out = []
+    for kind, seq in (("prefill", prompt_len), ("decode", context_len)):
+        shape = ShapeConfig(f"serve_{kind}", seq, batch, kind)
+        out.append(StepProfile(
+            compute_s=roofline.model_flops(cfg, shape)
+            / (chips * spec.peak_flops),
+            memory_s=roofline.memory_floor_s(cfg, shape, chips, spec)))
+    return out[0], out[1]
+
+
+def scale_profile(profile: StepProfile, wall_s: float) -> StepProfile:
+    """Rescale a derived profile so its nominal step time equals a measured
+    wall-clock: the roofline *position* (arithmetic intensity) comes from
+    the model config, the magnitude from the measurement."""
+    r = wall_s / profile.total_s
+    return StepProfile(compute_s=profile.compute_s * r,
+                       memory_s=profile.memory_s * r,
+                       collective_s=profile.collective_s * r)
+
+
+def _sample_tokens(logits: jax.Array, temperature: jax.Array,
+                   key: jax.Array) -> jax.Array:
+    """Greedy/categorical per row: logits [B,V], temperature scalar or [B]
+    (0 = greedy). Traced temperature, so one compiled graph serves any mix
+    of per-slot sampling params."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32),
+                         logits.shape[:-1])
+
+    def _categorical(_):
+        sampled = jax.random.categorical(
+            key, logits / jnp.maximum(t, 1e-6)[..., None], axis=-1
+        ).astype(jnp.int32)
+        return jnp.where(t > 0.0, sampled, greedy)
+
+    # all-greedy batches (the common serving default) skip the gumbel-noise
+    # draw entirely — at decode batch sizes it costs as much as a layer
+    return jax.lax.cond(jnp.any(t > 0.0), _categorical,
+                        lambda _: greedy, None)
 
 
 @dataclass
@@ -30,7 +105,192 @@ class Request:
     max_new_tokens: int = 16
 
 
+@dataclass
+class Prefix:
+    """A prefilled prompt, ready for :meth:`ContinuousEngine.insert`: the
+    per-layer cache rows for one sequence (padded to the prompt page), the
+    first sampled token, and the slot bookkeeping that travels with it."""
+    state: Any                    # cache pytree, batch dim 1, seq dim = page
+    token: jax.Array              # [] int32 — sampled from the prompt logits
+    length: int                   # true prompt length
+    max_new: int                  # decode budget (first token included)
+    temperature: float = 0.0
+
+
+class ContinuousEngine:
+    """Fixed pool of ``max_slots`` decode slots over donated jax buffers.
+
+    ``prefill`` runs one prompt (right-padded only to its power-of-two page)
+    and samples the first token; ``insert`` scatter-writes the prefix rows
+    into a free slot; ``generate_step`` advances every slot one token with
+    per-slot positions, gathering per-slot sampling temperatures. A
+    scheduler (see :func:`repro.serving.serve`) admits queued requests into
+    freed slots between steps — continuous batching.
+
+    With a ``session``, each scheduler tick reports its prefill count and
+    decode step as distinct roofline profiles via ``observe_many`` — the
+    per-phase power-policy hook."""
+
+    def __init__(self, cfg: ModelConfig, rt: Runtime, params,
+                 max_slots: int = 8, max_len: int = 256, page: int = 16,
+                 session: Optional[EnergySession] = None,
+                 prefill_profile: Optional[StepProfile] = None,
+                 decode_profile: Optional[StepProfile] = None,
+                 seed: int = 0):
+        if cfg.family not in SLOT_FAMILIES:
+            raise ValueError(
+                f"continuous batching needs per-slot position-indexed KV "
+                f"(families {SLOT_FAMILIES}); family {cfg.family!r} is "
+                f"served by ServeEngine.generate")
+        self.cfg, self.rt, self.params = cfg, rt, params
+        self.max_slots, self.max_len, self.page = max_slots, max_len, page
+        self.session = session
+        if prefill_profile is None or decode_profile is None:
+            chip = session.chip if session is not None else TPU_V5E
+            pre, dec = serving_profiles(cfg, chip=chip, batch=max_slots,
+                                        context_len=max_len)
+            prefill_profile = prefill_profile or pre
+            decode_profile = decode_profile or dec
+        self.prefill_profile, self.decode_profile = (prefill_profile,
+                                                     decode_profile)
+        # per-slot device state (donated through every jitted update)
+        self._state = decode_mod.init_decode_state(cfg, rt, max_slots,
+                                                   max_len)
+        self._pos = jnp.zeros((max_slots,), jnp.int32)
+        self._tokens = jnp.zeros((max_slots,), jnp.int32)
+        self._temps = jnp.zeros((max_slots,), jnp.float32)
+        self._key = jax.random.PRNGKey(seed)
+        self._all_active = jnp.ones((max_slots,), bool)
+        self._prefill_fns: Dict[int, Any] = {}   # one per prompt page
+        self._insert_fns: Dict[int, Any] = {}
+        # donation halves cache residency on accelerators; on the CPU
+        # backend it serializes the per-step cache copies (the runtime can't
+        # double-buffer a donated input), costing ~30% per step
+        donate = (1, 2, 3, 6) if jax.default_backend() != "cpu" else ()
+        self._step_fn = jax.jit(self._step_impl, donate_argnums=donate)
+        self.n_prefills = 0
+        self.n_steps = 0
+
+    # ------------------------------------------------------------- prefill
+    def _bucket(self, length: int) -> int:
+        """Prompt page: the smallest power-of-two >= length (floor =
+        ``page``) — right-padding never exceeds the page size and each page
+        compiles once."""
+        b = max(self.page, 1)
+        while b < length:
+            b *= 2
+        return min(b, self.max_len)
+
+    def _make_prefill(self, page: int):
+        cfg, rt = self.cfg, self.rt
+
+        def f(params, tokens, length, temperature, key):
+            logits, state = decode_mod.prefill(
+                cfg, rt, params, {"tokens": tokens}, page, lengths=length)
+            tok = _sample_tokens(logits[:, 0, :cfg.vocab_size],
+                                 temperature, key)
+            return tok[0], state
+
+        return jax.jit(f)
+
+    def prefill(self, request: Request, temperature: float = 0.0) -> Prefix:
+        """Run one prompt through the trunk; returns the :class:`Prefix`
+        (cache rows at its page size + first sampled token)."""
+        prompt = np.asarray(request.prompt, np.int32)[: self.max_len - 1]
+        L = max(len(prompt), 1)
+        page = self._bucket(L)
+        toks = np.zeros((1, page), np.int32)
+        toks[0, :len(prompt)] = prompt
+        fn = self._prefill_fns.get(page)
+        if fn is None:
+            fn = self._prefill_fns[page] = self._make_prefill(page)
+        if temperature > 0.0:
+            self._key, sub = jax.random.split(self._key)
+        else:
+            sub = self._key     # greedy consumes no randomness: skip the
+            #                     host-side split dispatch per admission
+        tok, state = fn(self.params, jnp.asarray(toks),
+                        jnp.asarray([L], jnp.int32),
+                        jnp.float32(temperature), sub)
+        self.n_prefills += 1
+        max_new = max(1, min(request.max_new_tokens, self.max_len - L))
+        return Prefix(state=state, token=tok, length=L, max_new=max_new,
+                      temperature=temperature)
+
+    # -------------------------------------------------------------- insert
+    def _make_insert(self, page: int):
+        def f(state, pos, tokens, temps, prefix_state, token, slot, length,
+              temperature):
+            def put(c, u):
+                # c: [..., slots, max_len, ...]; u: [..., 1, page, ...] —
+                # the slot axis follows the (scanned) layer axis everywhere
+                start = (0, slot) + (0,) * (c.ndim - 2)
+                return jax.lax.dynamic_update_slice(c, u.astype(c.dtype),
+                                                    start)
+
+            state = jax.tree.map(put, state, prefix_state)
+            return (state, pos.at[slot].set(length),
+                    tokens.at[slot].set(token),
+                    temps.at[slot].set(temperature))
+
+        return jax.jit(f, donate_argnums=(0, 1, 2, 3))
+
+    def insert(self, prefix: Prefix, slot: int) -> None:
+        """Scatter the prefix rows into ``slot`` and arm its position, last
+        token and sampling temperature."""
+        page = jax.tree.leaves(prefix.state)[0].shape[2]
+        fn = self._insert_fns.get(page)
+        if fn is None:
+            fn = self._insert_fns[page] = self._make_insert(page)
+        self._state, self._pos, self._tokens, self._temps = fn(
+            self._state, self._pos, self._tokens, self._temps,
+            prefix.state, prefix.token, jnp.int32(slot),
+            jnp.int32(prefix.length), jnp.float32(prefix.temperature))
+
+    # ------------------------------------------------------ generate_step
+    def _step_impl(self, params, state, pos, tokens, temps, active, key):
+        key, sub = jax.random.split(key)
+        logits, state = decode_mod.decode_step(
+            self.cfg, self.rt, params, tokens[:, None], pos, state)
+        nxt = _sample_tokens(logits[:, 0, :self.cfg.vocab_size], temps, sub)
+        # inactive slots hold position/token so an inserted prefix starts
+        # clean; their cache writes land on dead rows (never attended)
+        pos = pos + active.astype(jnp.int32)
+        tokens = jnp.where(active, nxt, tokens)
+        return state, pos, tokens, nxt, key
+
+    def generate_step(self, active=None) -> jax.Array:
+        """Advance every (active) slot one token; returns the [max_slots]
+        int32 tokens sampled this step (inactive entries are meaningless)."""
+        act = (self._all_active if active is None
+               else jnp.asarray(active, bool))
+        self._state, self._pos, self._tokens, toks, self._key = \
+            self._step_fn(self.params, self._state, self._pos, self._tokens,
+                          self._temps, act, self._key)
+        self.n_steps += 1
+        return toks
+
+    # ------------------------------------------------------------- energy
+    def observe(self, n_prefills: int, n_decode: int = 1,
+                wall_s: Optional[float] = None):
+        """Report one scheduler tick to the session: ``n_prefills``
+        compute-bound prefill profiles + ``n_decode`` memory-bound decode
+        profiles, one vectorized policy pass."""
+        if self.session is None:
+            return None
+        profiles = ([self.prefill_profile] * n_prefills
+                    + [self.decode_profile] * n_decode)
+        if not profiles:
+            return None
+        return self.session.observe_many(profiles, wall_s=wall_s)
+
+
 class ServeEngine:
+    """Blocking batch facade over the serving substrate (compatibility
+    wrapper). Greedy calls on slot-capable families route through a pooled
+    :class:`ContinuousEngine`; temperature sampling and the other families
+    take the lock-step path below."""
+
     def __init__(self, cfg: ModelConfig, rt: Runtime, params,
                  max_len: int = 256,
                  session: Optional[EnergySession] = None,
@@ -41,9 +301,24 @@ class ServeEngine:
         self.profile = profile      # decode-step roofline profile (if known)
         self._prefill = jax.jit(
             lambda p, b: decode_mod.prefill(cfg, rt, p, b, max_len))
+        self._prefill_masked = jax.jit(
+            lambda p, b, l: decode_mod.prefill(cfg, rt, p, b, max_len,
+                                               lengths=l))
         self._decode = jax.jit(
             lambda p, tok, pos, st: decode_mod.decode_step(
                 cfg, rt, p, tok, pos, st))
+        self._cont: Dict[int, ContinuousEngine] = {}  # slot pools, by batch
+        self._derived_decode: Optional[StepProfile] = None
+
+    def _decode_roofline(self) -> StepProfile:
+        """Decode-phase profile derived from the model config via the chip
+        roofline (replaces the old hardcoded 0.1*wall guess); scaled to the
+        measured wall-clock per step at observe time."""
+        if self._derived_decode is None:
+            chip = self.session.chip if self.session is not None else TPU_V5E
+            self._derived_decode = serving_profiles(
+                self.cfg, chip=chip, batch=1, context_len=self.max_len)[1]
+        return self._derived_decode
 
     def _sample(self, logits: jax.Array, temperature: float,
                 key: jax.Array) -> jax.Array:
@@ -56,35 +331,99 @@ class ServeEngine:
     def generate(self, requests: List[Request], temperature: float = 0.0,
                  seed: int = 0, extra_batch: Optional[Dict] = None
                  ) -> List[np.ndarray]:
-        """Left-align prompts to the batch max length (right-pad short ones
-        with token 0), prefill, then decode all sequences in lock-step.
+        """Generate for a batch of requests, blocking until all are done
+        (every output is ``max(r.max_new_tokens)`` long — the legacy
+        contract; per-request budgets need :func:`repro.serving.serve`).
 
-        Prompts at the batch max length decode exactly as if batched alone.
-        Shorter prompts see their pad tokens as context (prefill has no
-        per-sequence masking), so their continuations depend on the batch
-        max — batch same-length requests together when that matters."""
+        Short prompts' continuations are independent of the batch max for
+        the causal-cache families (per-sequence prefill masking and decode
+        positions); only the recurrent families (ssm/hybrid) still fold pad
+        tokens into their state — batch same-length requests there."""
+        if (self.cfg.family in SLOT_FAMILIES and temperature <= 0.0
+                and extra_batch is None):
+            return self._generate_continuous(requests, seed)
+        return self.generate_blocking(requests, temperature, seed,
+                                      extra_batch)
+
+    # ---------------------------------------------------- continuous route
+    def _generate_continuous(self, requests: List[Request],
+                             seed: int) -> List[np.ndarray]:
+        B = len(requests)
+        eng = self._cont.get(B)
+        if eng is None:
+            eng = self._cont[B] = ContinuousEngine(
+                self.cfg, self.rt, self.params, max_slots=B,
+                max_len=self.max_len, seed=seed)
+        eng._key = jax.random.PRNGKey(seed)
+        plen = min(max(len(r.prompt) for r in requests), self.max_len - 1)
+        max_new = min(max(r.max_new_tokens for r in requests),
+                      self.max_len - plen)
+        outs = [[] for _ in range(B)]
+        for i, r in enumerate(requests):
+            pf = eng.prefill(r)
+            eng.insert(pf, i)
+            outs[i].append(int(pf.token))
+        walls: List[float] = []
+        # legacy cadence: max_new decode calls (the last one's sample is
+        # discarded, as the lock-step loop always did) -> telemetry parity
+        for i in range(max_new):
+            t0 = time.perf_counter()
+            toks = eng.generate_step()
+            toks = np.asarray(toks)
+            wall = time.perf_counter() - t0
+            walls.append(wall)
+            if i + 1 < max_new:
+                for b in range(B):
+                    outs[b].append(int(toks[b]))
+            if self.session is not None and self.profile is None:
+                self.session.observe(
+                    i, scale_profile(self._decode_roofline(), wall), wall)
+        if self.session is not None and self.profile is not None:
+            self.session.observe_many([self.profile] * max_new,
+                                      wall_s=walls, start_step=0)
+        return [np.asarray(o, np.int32) for o in outs]
+
+    # ----------------------------------------------------- lock-step route
+    def generate_blocking(self, requests: List[Request],
+                          temperature: float = 0.0, seed: int = 0,
+                          extra_batch: Optional[Dict] = None
+                          ) -> List[np.ndarray]:
+        """The legacy path: one right-padded prefill, then every sequence
+        decodes in lock-step to the batch-max budget. Kept public as the
+        baseline the continuous engine is benchmarked against."""
         B = len(requests)
         plen = min(max(len(r.prompt) for r in requests), self.max_len - 1)
         prompts = np.zeros((B, plen), np.int32)
+        lengths = np.zeros((B,), np.int32)
         for i, r in enumerate(requests):
             p = np.asarray(r.prompt[:plen])
             prompts[i, :len(p)] = p
+            lengths[i] = len(p)
         batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
         if extra_batch:
             batch.update(extra_batch)
         key = jax.random.PRNGKey(seed)
 
-        logits, state = self._prefill(self.params, batch)
+        # per-sequence masking for heterogeneous causal-cache batches; the
+        # uniform case keeps the original scalar-position graph bit-for-bit
+        masked = (lengths.min() != lengths.max()
+                  and self.cfg.family in decode_mod.CAUSAL_CACHE_FAMILIES)
+        if masked:
+            logits, state = self._prefill_masked(self.params, batch,
+                                                 jnp.asarray(lengths))
+            base_pos = jnp.asarray(lengths)
+        else:
+            logits, state = self._prefill(self.params, batch)
+            base_pos = None
         max_new = min(max(r.max_new_tokens for r in requests),
                       self.max_len - plen)
         outs = []
-        tok = None
         walls: List[float] = []
         for i in range(max_new):
             key, sub = jax.random.split(key)
             tok = self._sample(logits, temperature, sub)
             outs.append(np.asarray(tok))
-            pos = jnp.int32(plen + i)
+            pos = jnp.int32(plen + i) if base_pos is None else base_pos + i
             t0 = time.perf_counter()
             logits, state = self._decode(self.params, tok[:, None], pos,
                                          state)
@@ -92,9 +431,10 @@ class ServeEngine:
             wall = time.perf_counter() - t0
             walls.append(wall)
             if self.session is not None and self.profile is None:
-                # profile derived from this step's wall-clock: must record
+                # profile scaled to this step's wall-clock: must record
                 # online, one step at a time
-                self.session.observe(i, _wall_profile(wall), wall)
+                self.session.observe(
+                    i, scale_profile(self._decode_roofline(), wall), wall)
         if self.session is not None and self.profile is not None:
             # known decode profile: one vectorized policy pass for the whole
             # decode loop instead of max_new scalar sweeps

@@ -90,12 +90,17 @@ def test_serve_engine_heterogeneous_prompts_not_truncated():
     ref = engine.generate([Request(long, max_new_tokens=5),
                            Request(long, max_new_tokens=5)])
     np.testing.assert_array_equal(mixed[1], ref[0])
-    # documented limitation, not silence: the short prompt is conditioned on
-    # its pad tokens (prefill has no per-sequence masking), so its output is
-    # only reproducible for the same batch max length
-    mixed2 = engine.generate([Request(short, max_new_tokens=5),
-                              Request(long, max_new_tokens=5)])
-    np.testing.assert_array_equal(mixed[0], mixed2[0])
+    # pad-as-context bug closed: the short prompt's continuation is
+    # independent of its batch-mates (per-sequence prefill masking + decode
+    # positions), not just reproducible for one batch composition
+    solo = engine.generate([Request(short, max_new_tokens=5),
+                            Request(short, max_new_tokens=5)])
+    np.testing.assert_array_equal(mixed[0], solo[0])
+    # ... and the lock-step path agrees (same per-sequence masking there)
+    blocking = engine.generate_blocking([Request(short, max_new_tokens=5),
+                                         Request(long, max_new_tokens=5)])
+    np.testing.assert_array_equal(mixed[0], blocking[0])
+    np.testing.assert_array_equal(mixed[1], blocking[1])
 
 
 def test_serve_engine_session_telemetry():
