@@ -1,0 +1,84 @@
+"""Batched objective-grid throughput: one ``decision_grid`` pass per chip
+over the full metrics x power-caps menu against the equivalent nested
+per-cell ``TransferSurface.sweep_decisions`` loop over the same
+metrics x chips x caps grid. Sharing the per-frequency surface
+evaluations (and one broadcast accept lattice) across cells must win by
+>=5x — this is the perf contract behind the Study ``metrics=`` axis and
+is gated in CI (benchmarks/baselines.json)."""
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.power import (ChipModel, ProfileArray, StepProfile,
+                         SWEEP_OBJECTIVES, decision_grid)
+
+N_PROFILES = 1_000
+# per-chip cap menu: uncapped + four depths down the Table-III range
+CHIP_CAPS = {
+    "mi250x-gcd": (None, 560.0, 420.0, 300.0, 200.0),
+    "h100-sxm": (None, 700.0, 525.0, 380.0, 250.0),
+}
+SLOWDOWN_BUDGET = 0.15
+N_FREQS = 13
+
+
+def _profiles(n: int, seed: int = 0) -> List[StepProfile]:
+    rng = np.random.default_rng(seed)
+    cmn = rng.uniform(1e-3, 2.0, size=(n, 3))
+    cmn[::5, 2] = 0.0
+    return [StepProfile(float(c), float(m), float(x)) for c, m, x in cmn]
+
+
+def run(verbose: bool = False) -> List[Tuple[str, float, str]]:
+    objectives = list(SWEEP_OBJECTIVES)
+    pa = ProfileArray.from_profiles(_profiles(N_PROFILES))
+    surfs = {name: ChipModel(name).surface() for name in CHIP_CAPS}
+    n_cells = sum(len(objectives) * len(caps) for caps in CHIP_CAPS.values())
+
+    t_grid = float("inf")
+    for _ in range(3):                           # best-of-3: stable CI gate
+        t0 = time.perf_counter()
+        grids = {name: decision_grid(surfs[name], pa, objectives=objectives,
+                                     power_caps=caps,
+                                     slowdown_budget=SLOWDOWN_BUDGET,
+                                     n_freqs=N_FREQS)
+                 for name, caps in CHIP_CAPS.items()}
+        t_grid = min(t_grid, time.perf_counter() - t0)
+
+    # the path we replaced: one full sweep_decisions pass per
+    # (chip, metric, cap) cell, each re-evaluating the transfer surface
+    t0 = time.perf_counter()
+    cells = {name: [[surfs[name].sweep_decisions(
+        pa, slowdown_budget=SLOWDOWN_BUDGET, n_freqs=N_FREQS,
+        power_cap_w=cap, objective=obj) for cap in caps]
+        for obj in objectives] for name, caps in CHIP_CAPS.items()}
+    t_loop = time.perf_counter() - t0
+
+    # same decisions, different engine shape (bit-for-bit, not approximate)
+    for name, caps in CHIP_CAPS.items():
+        for mi in (0, len(objectives) - 1):
+            for ci in range(len(caps)):
+                assert np.array_equal(
+                    np.asarray(grids[name].freq_frac[mi, ci]),
+                    np.asarray(cells[name][mi][ci].freq_frac)), \
+                    (name, objectives[mi], caps[ci])
+    speedup = t_loop / max(t_grid, 1e-12)
+
+    if verbose:
+        print(f"\n# batched objective grid, {N_PROFILES} profiles x "
+              f"{len(objectives)} metrics x {len(CHIP_CAPS)} chips x "
+              f"{len(next(iter(CHIP_CAPS.values())))} caps "
+              f"({n_cells} cells)")
+        print(f"decision_grid: {t_grid * 1e3:.1f} ms   per-cell sweep loop: "
+              f"{t_loop * 1e3:.1f} ms   speedup: {speedup:.1f}x")
+    return [
+        ("objectives_grid_batched", t_grid * 1e6,
+         f"speedup_vs_loop={speedup:.1f}x;n_cells={n_cells};"
+         f"n_profiles={N_PROFILES}"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run(verbose=True):
+        print(",".join(str(x) for x in r))

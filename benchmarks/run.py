@@ -17,7 +17,7 @@ def main(argv=None) -> None:
             raise SystemExit("--json needs a PATH argument")
         json_path = argv[i + 1]
     from benchmarks import (bench_broker, bench_fleet_jobs, bench_membw,
-                            bench_modal, bench_projection,
+                            bench_modal, bench_objectives, bench_projection,
                             bench_roofline_table, bench_scenarios,
                             bench_serving, bench_sharded, bench_stream,
                             bench_surface, bench_train_step, bench_vai)
@@ -27,6 +27,7 @@ def main(argv=None) -> None:
         ("modal", bench_modal),              # Fig. 8, Table IV
         ("projection", bench_projection),    # Tables V & VI
         ("surface", bench_surface),          # batched sweeps vs scalar loop
+        ("objectives", bench_objectives),    # metric-grid vs per-cell loop
         ("fleet_jobs", bench_fleet_jobs),    # §V job-level, batched vs loop
         ("stream", bench_stream),            # chunked replay vs sample loop
         ("sharded", bench_sharded),          # jitted mesh replay vs numpy

@@ -74,7 +74,14 @@ class Decision:
                         / max(self.baseline_energy_j, 1e-12))
 
 
-SWEEP_OBJECTIVES: tuple = ("energy", "edp", "perf_per_watt")
+def __getattr__(name: str):
+    # lazy re-export: the objective registry lives in
+    # ``repro.power.objectives`` (single source of truth); importing it
+    # eagerly here would cycle through the repro.power package init.
+    if name == "SWEEP_OBJECTIVES":
+        from repro.power.objectives import SWEEP_OBJECTIVES
+        return SWEEP_OBJECTIVES
+    raise AttributeError(name)
 
 
 def sweep_decision(profile: StepProfile, chip: ChipModel,
@@ -83,28 +90,24 @@ def sweep_decision(profile: StepProfile, chip: ChipModel,
                    objective: str = "energy") -> Decision:
     """The paper's frequency sweep as a pure function: minimize the
     ``objective`` over the grid subject to the slowdown budget (and
-    optional power cap). Objectives (the capping-metric axis of
+    optional power cap). Objectives come from the shared registry
+    ``repro.power.objectives`` (the capping-metric axis of
     arXiv:2505.21758): ``"energy"`` (the paper's sweep, default),
-    ``"edp"`` (energy-delay product ``E*t``), ``"perf_per_watt"``
-    (maximize work per watt-second, i.e. minimize ``t*P`` — identical to
-    ``E`` under this power model, kept as its own spelling for tables
-    whose measured E and t*P diverge)."""
-    if objective not in SWEEP_OBJECTIVES:
-        raise ValueError(f"unknown sweep objective {objective!r}; "
-                         f"known: {SWEEP_OBJECTIVES}")
+    ``"edp"`` / ``"ed2p"`` (energy-delay products ``E*t`` / ``E*t²``),
+    ``"perf_per_watt"`` (maximize work per watt-second, i.e. minimize
+    ``t*P`` — identical to ``E`` under this power model, kept as its own
+    spelling for tables whose measured E and t*P diverge), and
+    ``"dt_bounded_savings"`` (energy under the budget bound)."""
+    from repro.power.objectives import get_objective
+    obj = get_objective(objective, what="sweep objective")
     t0 = chip.step_time(profile, 1.0)
     e0 = chip.energy_j(profile, 1.0)
     budget = t0 * (1.0 + slowdown_budget)
-
-    def score(e: float, t: float, f: float) -> float:
-        if objective == "edp":
-            return e * t
-        if objective == "perf_per_watt":
-            return t * chip.power_w(profile, f)
-        return e
+    need_pw = obj.needs_power
 
     best_f, best_e = 1.0, e0
-    best_s = score(e0, t0, 1.0)
+    best_s = obj.score(e0, t0, chip.power_w(profile, 1.0) if need_pw
+                       else None)
     for f in chip.freq_grid(n_freqs):
         if power_cap_w is not None and chip.power_w(profile, f) > power_cap_w:
             continue
@@ -112,7 +115,7 @@ def sweep_decision(profile: StepProfile, chip: ChipModel,
         if t > budget * (1.0 + 1e-9):
             continue
         e = chip.energy_j(profile, f)
-        s = score(e, t, f)
+        s = obj.score(e, t, chip.power_w(profile, f) if need_pw else None)
         if s < best_s - 1e-12:
             best_f, best_e, best_s = f, e, s
     return Decision(

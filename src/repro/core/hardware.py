@@ -64,7 +64,37 @@ MI250X_GCD = ChipSpec(
     f_min_mhz=700,
 )
 
-CHIPS = {c.name: c for c in (TPU_V5E, MI250X_GCD)}
+# H100 SXM and MI300X: no public Table-III equivalent either, so (like the
+# TPU) their response surfaces are model-derived from the roofline position.
+# Datasheet points: dense bf16 peak, HBM3(E) bandwidth, board TDP; the clock
+# range spans the advertised boost ceiling down to the lowest DVFS state.
+H100_SXM = ChipSpec(
+    name="h100-sxm",
+    peak_flops=989e12,         # dense bf16 (no sparsity)
+    hbm_bw=3.35e12,
+    hbm_bytes=80 * GiB,
+    ici_bw=450e9,              # NVLink4, one direction
+    vmem_bytes=50 * MiB,       # L2
+    idle_w=90.0,
+    tdp_w=700.0,
+    f_nominal_mhz=1980,
+    f_min_mhz=210,
+)
+
+MI300X = ChipSpec(
+    name="mi300x",
+    peak_flops=1307e12,        # dense bf16
+    hbm_bw=5.3e12,
+    hbm_bytes=192 * GiB,
+    ici_bw=128e9,              # Infinity Fabric, per link
+    vmem_bytes=256 * MiB,      # Infinity Cache
+    idle_w=130.0,
+    tdp_w=750.0,
+    f_nominal_mhz=2100,
+    f_min_mhz=500,
+)
+
+CHIPS = {c.name: c for c in (TPU_V5E, MI250X_GCD, H100_SXM, MI300X)}
 
 # ---------------------------------------------------------------------------
 # Paper Table III — measured relative response (% of the uncapped run) on

@@ -496,10 +496,14 @@ def _slices(n: int, chunk: int):
 def _build_decide_kernel(kind, nf: int):
     import jax.numpy as jnp
     from jax import lax
+    from repro.power.objectives import get_objective
     fence = lax.optimization_barrier
     objective, has_cap = "energy", False
     if isinstance(kind, tuple):
         kind, objective, has_cap = kind
+    # registry scores are pure arithmetic (exactly-rounded products),
+    # so the jnp and numpy evaluations agree bit for bit
+    score = get_objective(objective).score
 
     def kern(p, m, dur, fr, pfr, sc, fgrid, pgrid):
         # ---- infer_profiles on the recording chip
@@ -557,14 +561,6 @@ def _build_decide_kernel(kind, nf: int):
             e = pw * t
         else:                           # "sweep" (energy-aware)
             budget = t0 * sc[_IX["budget_mult"]]
-
-            def score(e, t, pw):
-                if objective == "edp":
-                    return e * t
-                if objective == "perf_per_watt":
-                    return t * pw
-                return e
-
             best_f = jnp.ones_like(t0)
             best_pf = jnp.full_like(t0, sc[_IX["pow_one"]])
             best_e = e0

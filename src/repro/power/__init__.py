@@ -13,6 +13,12 @@ surface   — :class:`TransferSurface`: the same transfer functions over
             ``freq_for_power_cap``, and :func:`response_table` — model-
             derived Table III columns for any registered chip (cross-chip
             projection via ``project(..., tables=...)``)
+objectives— the optimization-metric registry: :class:`Objective` scores
+            ``(energy, time, power)`` sweeps (``energy`` / ``edp`` /
+            ``ed2p`` / ``perf_per_watt`` / ``dt_bounded_savings``) and
+            projection rows (``cap_score``); every sweep/selection below
+            resolves its ``objective=`` here, and :func:`decision_grid`
+            evaluates all metrics x caps batched on the surface
 policies  — :class:`PowerPolicy` protocol + ``nominal`` / ``static`` /
             ``power-cap`` / ``energy-aware`` implementations, selected by
             name via :func:`get_policy`; each also vectorizes as
@@ -82,6 +88,9 @@ from repro.core.telemetry import (  # noqa: F401
 from repro.power.chip import (  # noqa: F401
     CHIPS, ChipModel, ChipSpec, MI250X_GCD, MODES, Mode, StepProfile,
     TPU_V5E, profile_from_roofline)
+from repro.power.objectives import (  # noqa: F401
+    GridDecisions, OBJECTIVES, Objective, SWEEP_OBJECTIVES, check_objective,
+    decision_grid, get_objective)
 from repro.power.surface import (  # noqa: F401
     BatchDecision, ProfileArray, TransferSurface, response_table)
 from repro.power.policies import (  # noqa: F401
@@ -101,8 +110,8 @@ from repro.power.broker import (  # noqa: F401
     GreedyValueBroker, OracleBroker, PolicyBroker, UniformBroker,
     get_broker, simulate_cluster)
 from repro.power.scenarios import (  # noqa: F401
-    CellResult, Scenario, Study, StudyResult, TablesLike, Workload,
-    cap_label, resolve_tables)
+    CellResult, ConfidenceInterval, Scenario, Study, StudyResult, TablesLike,
+    Workload, cap_label, resolve_tables)
 
 __all__ = [
     # chip model
@@ -111,6 +120,9 @@ __all__ = [
     # array-native transfer surface + cross-chip response tables
     "BatchDecision", "ProfileArray", "ResponseTables", "TransferSurface",
     "builtin_tables", "response_table",
+    # optimization objectives (one registry behind every sweep/selection)
+    "GridDecisions", "OBJECTIVES", "Objective", "SWEEP_OBJECTIVES",
+    "check_objective", "decision_grid", "get_objective",
     # policies
     "POLICIES", "PowerPolicy", "NominalPolicy", "StaticFrequencyPolicy",
     "PowerCapPolicy", "EnergyAwarePolicy", "get_policy",
@@ -136,6 +148,6 @@ __all__ = [
     "ClusterTrace", "GreedyValueBroker", "OracleBroker", "PolicyBroker",
     "UniformBroker", "get_broker", "simulate_cluster",
     # declarative scenario studies (the grid surface over everything above)
-    "CellResult", "Scenario", "Study", "StudyResult", "TablesLike",
-    "Workload", "cap_label", "resolve_tables",
+    "CellResult", "ConfidenceInterval", "Scenario", "Study", "StudyResult",
+    "TablesLike", "Workload", "cap_label", "resolve_tables",
 ]

@@ -69,6 +69,7 @@ from repro.power.jobs import (COMPUTE_INTENSIVE, DT0_TOL_PCT,
                               FleetJobsReport, JOB_CLASSES, LATENCY_BOUND,
                               MEMORY_INTENSIVE, _MODE_TO_CLASS,
                               class_cap_report, classify_jobs, default_caps)
+from repro.power.objectives import get_objective
 from repro.power.policies import decide_batch
 from repro.power.surface import ProfileArray
 
@@ -513,28 +514,23 @@ class GreedyValueBroker:
     the model's uncapped step time), then — under budget pressure — jobs
     are pushed deeper in rising objective-penalty-per-watt-shed order
     (the ``decide_batch`` / :class:`TransferSurface` marginal-savings
-    ranking of the ISSUE). ``objective`` mirrors the sweep spellings:
-    ``"energy"`` / ``"edp"`` / ``"perf_per_watt"``."""
+    ranking of the ISSUE). ``objective`` takes any name in the shared
+    registry :data:`repro.power.objectives.OBJECTIVES` (``"energy"`` /
+    ``"edp"`` / ``"ed2p"`` / ``"perf_per_watt"`` /
+    ``"dt_bounded_savings"``)."""
 
     offline = False
 
     def __init__(self, objective: str = "energy",
                  slowdown_budget: float = 0.10):
-        from repro.core.governor import SWEEP_OBJECTIVES
-        if objective not in SWEEP_OBJECTIVES:
-            raise ValueError(f"unknown objective {objective!r}; "
-                             f"known: {SWEEP_OBJECTIVES}")
-        self.objective = objective
+        self.objective = get_objective(objective).name
         self.slowdown_budget = float(slowdown_budget)
-        self.name = "greedy" if objective == "energy" \
-            else f"greedy-{objective}"
+        self.name = "greedy" if self.objective == "energy" \
+            else f"greedy-{self.objective}"
 
     def _objective(self, view: BrokerView) -> np.ndarray:
-        if self.objective == "edp":
-            return view.model_energy_j * view.model_time_s
-        if self.objective == "perf_per_watt":
-            return view.model_time_s * view.model_power_w
-        return view.model_energy_j
+        return get_objective(self.objective).score(
+            view.model_energy_j, view.model_time_s, view.model_power_w)
 
     def allocate(self, view: BrokerView) -> np.ndarray:
         obj = self._objective(view)
@@ -551,18 +547,24 @@ class ClassScheduleBroker:
     classified from their *observed* chunks (dominant observed mode);
     per-class caps come from a :func:`project_batch` over the observed
     class aggregates under exactly the offline rules (L.B. uncapped,
-    M.I. savings-max among dT<=tol, C.I. unconstrained savings-max).
-    Jobs younger than ``warmup_s`` run uncapped — the broker has not
-    seen them yet. Budget pressure falls back to greedy deepening by
-    scored savings."""
+    M.I. best among dT<=tol, C.I. unconstrained best) where "best" is
+    the cap maximizing ``objective``'s metric-equivalent savings
+    (:meth:`~repro.power.objectives.Objective.cap_score`; the default
+    ``"energy"`` is the paper's savings-max rule bit-for-bit). Jobs
+    younger than ``warmup_s`` run uncapped — the broker has not seen
+    them yet. Budget pressure falls back to greedy deepening by scored
+    savings."""
 
     offline = False
 
     def __init__(self, warmup_s: float = 900.0,
-                 dt0_tol_pct: float = DT0_TOL_PCT):
+                 dt0_tol_pct: float = DT0_TOL_PCT,
+                 objective: str = "energy"):
         self.warmup_s = float(warmup_s)
         self.dt0_tol_pct = float(dt0_tol_pct)
-        self.name = "class-schedule"
+        self.objective = get_objective(objective).name
+        self.name = "class-schedule" if self.objective == "energy" \
+            else f"class-schedule-{self.objective}"
 
     def allocate(self, view: BrokerView) -> np.ndarray:
         r = view.n_running
@@ -588,13 +590,17 @@ class ClassScheduleBroker:
                     e_total_mwh=np.array([max(e_tot, 1e-12)]),
                     dt_weight=np.array([w]), tables=view.tables)
                 sav, dt = proj.savings_pct[0], proj.dt_pct[0]
+                obj = get_objective(self.objective)
+                val = obj.cap_score(sav, dt, dt_tol_pct=self.dt0_tol_pct)
                 if name == MEMORY_INTENSIVE:
                     fit = dt <= self.dt0_tol_pct
                     if not fit.any():
                         continue
-                    pick = int(np.argmax(np.where(fit, sav, -np.inf)))
+                    pick = int(np.argmax(np.where(fit, val, -np.inf)))
                 else:                               # compute-intensive
-                    pick = int(np.argmax(sav))
+                    if not (val > -np.inf).any():
+                        continue
+                    pick = int(np.argmax(val))
                 choice[sel] = pick + 1              # menu idx 0 = uncapped
         return _greedy_deepen(view.draw_w, view.model_energy_j, choice,
                               view.budget_w)
@@ -610,8 +616,12 @@ class OracleBroker:
     name = "oracle"
     offline = True
 
-    def __init__(self, dt0_tol_pct: float = DT0_TOL_PCT):
+    def __init__(self, dt0_tol_pct: float = DT0_TOL_PCT,
+                 objective: str = "energy"):
         self.dt0_tol_pct = float(dt0_tol_pct)
+        self.objective = get_objective(objective).name
+        if self.objective != "energy":
+            self.name = f"oracle-{self.objective}"
         self.schedule: Optional[FleetJobsReport] = None
         self._choice: Optional[np.ndarray] = None
 
@@ -621,7 +631,8 @@ class OracleBroker:
         self.schedule = class_cap_report(trace.decomp, caps=caps,
                                          kind=kind,
                                          dt0_tol_pct=self.dt0_tol_pct,
-                                         tables=tables)
+                                         tables=tables,
+                                         objective=self.objective)
         cap_by_class = {c.job_class: c.cap for c in self.schedule.classes}
         menu_idx = {None: 0}
         menu_idx.update({c: i + 1 for i, c in enumerate(caps)})

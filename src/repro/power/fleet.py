@@ -189,18 +189,23 @@ class FleetAnalysis:
         return self.decomposition
 
     def project(self, caps: List[float], kind: str = "freq",
-                tables: "TablesLike" = None) -> List[ProjectionRow]:
+                tables: "TablesLike" = None,
+                objective: str = "energy") -> List[ProjectionRow]:
         """Project fleet savings for a cap schedule (Tables V/VI engine)
         from this fleet's own modal energy split — the single-cell view of
         a projection :class:`repro.power.Scenario`. ``kind`` is ``"freq"``
         (MHz caps) or ``"power"`` (watt caps); ``tables`` is any
         :data:`~repro.power.scenarios.TablesLike` — e.g. ``"tpu-v5e"`` or
         a :class:`ResponseTables` swaps the measured MI250X response
-        surface for a model-derived one (cross-chip what-if)."""
+        surface for a model-derived one (cross-chip what-if). ``objective``
+        annotates each row with its metric-equivalent savings %
+        (``objective_pct``, from the shared registry
+        :mod:`repro.power.objectives`)."""
         from repro.power.scenarios import resolve_tables
         return project_from_decomposition(
             self._decomposition(), caps, kind,
-            tables=resolve_tables(tables, kind=kind, chip=self.chip))
+            tables=resolve_tables(tables, kind=kind, chip=self.chip),
+            objective=objective)
 
     def project_domains(self,
                         domain_energies: Mapping[str, Tuple[float, float]],
@@ -254,17 +259,22 @@ class FleetAnalysis:
             tables=resolve_tables(tables, kind=kind, chip=self.chip))
 
     def job_report(self, caps: Optional[Sequence[float]] = None,
-                   kind: str = "freq", tables: "TablesLike" = None
+                   kind: str = "freq", tables: "TablesLike" = None,
+                   objective: str = "energy"
                    ) -> "jobs_mod.FleetJobsReport":
         """Per-class cap schedule + aggregate savings (the paper's §V job-
         granular result: C.I. jobs capped for maximum savings, M.I. jobs
         capped at dT=0, latency-bound jobs left alone) — the single-cell
         view of a schedule :class:`repro.power.Scenario` (``policy=None``,
-        ``cap`` a sequence or ``None``)."""
+        ``cap`` a sequence or ``None``). ``objective`` makes the per-class
+        "best cap" selection metric-driven
+        (:meth:`repro.power.objectives.Objective.cap_score`; the default
+        ``"energy"`` is the paper's savings-max rule)."""
         from repro.power.scenarios import resolve_tables
         return jobs_mod.class_cap_report(
             self.per_job(), caps, kind,
-            tables=resolve_tables(tables, kind=kind, chip=self.chip))
+            tables=resolve_tables(tables, kind=kind, chip=self.chip),
+            objective=objective)
 
     # -------------------------------------------------------------- summary
     def summary(self) -> dict:

@@ -399,6 +399,7 @@ class FleetJobsReport:
     total_savings_mwh: float
     savings_pct: float                   # of total fleet energy
     dt0_savings_mwh: float               # savings from dT=0 classes only
+    objective: str = "energy"            # metric that drove cap selection
 
     def by_class(self) -> Dict[str, ClassReport]:
         return {c.job_class: c for c in self.classes}
@@ -409,7 +410,8 @@ class FleetJobsReport:
                     total_energy_mwh=self.total_energy_mwh,
                     total_savings_mwh=self.total_savings_mwh,
                     savings_pct=self.savings_pct,
-                    dt0_savings_mwh=self.dt0_savings_mwh)
+                    dt0_savings_mwh=self.dt0_savings_mwh,
+                    objective=self.objective)
 
     def __str__(self) -> str:
         lines = [f"class               jobs   E_MWh     cap  sav_MWh  sav%"
@@ -457,20 +459,27 @@ def class_cap_report(decomp: BatchModalDecomposition,
                      caps: Optional[Sequence[float]] = None,
                      kind: str = "freq",
                      dt0_tol_pct: float = DT0_TOL_PCT,
-                     tables=None) -> FleetJobsReport:
+                     tables=None,
+                     objective: str = "energy") -> FleetJobsReport:
     """Assign each job class its cap and aggregate the projected savings.
 
     Policy (paper §V-C): latency-bound jobs are never capped (no savings
-    opportunity in mode 1); memory-intensive jobs take the savings-maximizing
-    cap among those with projected ``dT <= dt0_tol_pct`` (the paper's "no
+    opportunity in mode 1); memory-intensive jobs take the best cap among
+    those with projected ``dT <= dt0_tol_pct`` (the paper's "no
     performance compromise" criterion); compute-intensive jobs take the
-    unconstrained savings-maximizing cap, accepting the projected slowdown.
+    unconstrained best cap, accepting the projected slowdown. "Best" is
+    the cap maximizing ``objective``'s metric-equivalent savings
+    (:meth:`~repro.power.objectives.Objective.cap_score`); the default
+    ``objective="energy"`` scores raw savings % — the paper's rule,
+    bit-for-bit.
 
     ``tables`` (any :data:`repro.power.scenarios.TablesLike` — a chip name,
     a :class:`ResponseTables`, ``None`` for the measured MI250X columns)
     swaps the response surface (cross-chip what-if).
     """
+    from repro.power.objectives import get_objective
     from repro.power.scenarios import resolve_tables
+    obj = get_objective(objective)
     tables = resolve_tables(tables, kind=kind)
     if caps is None:
         caps = default_caps(kind, tables)
@@ -506,20 +515,25 @@ def class_cap_report(decomp: BatchModalDecomposition,
             dt_weight=np.array([w_cls]), tables=tables)
         sav = proj.savings_pct[0]
         dt = proj.dt_pct[0]
-        best = int(np.argmax(sav))
-        best_pct = float(sav[best])
+        best_pct = float(sav[int(np.argmax(sav))])
+        val = obj.cap_score(sav, dt, dt_tol_pct=dt0_tol_pct)
         if name == LATENCY_BOUND:
             cap, s_pct, d_pct = None, 0.0, 0.0
         elif name == MEMORY_INTENSIVE:
             ok = dt <= dt0_tol_pct
             if ok.any():
-                pick = int(np.argmax(np.where(ok, sav, -np.inf)))
+                pick = int(np.argmax(np.where(ok, val, -np.inf)))
                 cap, s_pct, d_pct = caps[pick], float(sav[pick]), \
                     float(dt[pick])
             else:
                 cap, s_pct, d_pct = None, 0.0, 0.0
         else:                                   # compute-intensive
-            cap, s_pct, d_pct = caps[best], best_pct, float(dt[best])
+            if np.max(val) > -np.inf:
+                pick = int(np.argmax(val))
+                cap, s_pct, d_pct = caps[pick], float(sav[pick]), \
+                    float(dt[pick])
+            else:                               # no cap meets the bound
+                cap, s_pct, d_pct = None, 0.0, 0.0
         s_mwh = s_pct / 100.0 * cls_energy
         meets = d_pct <= dt0_tol_pct
         if meets:
@@ -531,7 +545,7 @@ def class_cap_report(decomp: BatchModalDecomposition,
         kind=kind, caps=caps, classes=reports,
         total_energy_mwh=fleet_total, total_savings_mwh=total_savings,
         savings_pct=100.0 * total_savings / max(fleet_total, 1e-12),
-        dt0_savings_mwh=dt0_savings)
+        dt0_savings_mwh=dt0_savings, objective=obj.name)
 
 
 def project_jobs(decomp: BatchModalDecomposition,

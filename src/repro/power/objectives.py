@@ -1,0 +1,288 @@
+"""Optimization objectives as first-class, registry-backed citizens.
+
+The paper's 8.5% / 1438 MWh headline is derived under ONE objective —
+energy at bounded slowdown — but the power-capping metric study
+(arXiv:2505.21758) and the DVFS evaluation survey (arXiv:1703.02788)
+both treat the objective itself as an axis: EDP, ED²P and perf-per-watt
+pick materially different operating points on the same response tables.
+This module is the single source of truth for that axis. Before it, the
+objective math and its validation were triplicated (`governor
+.sweep_decision`, `surface.sweep_decisions`, `broker.GreedyValueBroker`)
+and the projection / cap-schedule layers knew nothing about it.
+
+An :class:`Objective` scores an operating point in two complementary
+spaces:
+
+* **grid score** — ``obj.score(energy_j, time_s, power_w)`` on sweep
+  grids: python floats, numpy arrays and jax tracers all work (the
+  sharded executor's jitted kernel calls the very same lambda), and the
+  sweep machinery always *minimizes* it. ``energy`` scores ``e``,
+  ``edp`` ``e*t``, ``ed2p`` ``e*t*t``, ``perf_per_watt`` ``t*power``
+  (minimizing ``t*P`` == maximizing work/(time*power), the conventional
+  perf-per-watt), ``dt_bounded_savings`` scores ``e`` — its dT bound IS
+  the sweep's slowdown-budget constraint;
+* **cap score** — ``obj.cap_score(savings_pct, dt_pct)`` on projection
+  rows (a cap's measured/model response), always *maximized*: the
+  metric-equivalent savings percentage. For ``energy`` it is the energy
+  savings itself (bit-for-bit the legacy per-class argmax), for ``edp``
+  / ``ed2p`` the EDP/ED²P savings implied by the row's (energy, runtime)
+  response, for ``perf_per_watt`` it reduces to energy savings (at fixed
+  work, perf/watt == work/energy), and ``dt_bounded_savings`` masks rows
+  whose slowdown exceeds the tolerance to ``-inf`` (the paper's
+  "no performance compromise" criterion as an objective).
+
+The registry is the one validator every layer shares:
+:func:`get_objective` / :func:`check_objective` replace the re-spelled
+``SWEEP_OBJECTIVES`` membership tests that used to live in ``governor``,
+``surface``, ``policies`` and ``broker`` (``governor.SWEEP_OBJECTIVES``
+remains as a re-export). :func:`decision_grid` is the batched
+evaluator: one (profiles, freqs) transfer-surface pass shared across a
+whole objectives × power-caps menu, each cell bit-for-bit equal to the
+standalone ``sweep_decisions`` call (`benchmarks/bench_objectives.py`
+gates the sharing at >=5x the per-cell loop).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+__all__ = [
+    "Objective", "OBJECTIVES", "SWEEP_OBJECTIVES", "GridDecisions",
+    "get_objective", "check_objective", "decision_grid",
+]
+
+#: Default dT tolerance (percent) for the ``dt_bounded_savings`` cap
+#: score — the paper's "no performance compromise" criterion (matches
+#: ``repro.power.jobs.DT0_TOL_PCT``).
+DT0_TOL_PCT = 0.5
+
+
+@dataclass(frozen=True)
+class Objective:
+    """One optimization objective, usable on every layer of the stack.
+
+    ``_score(e, t, p)`` must be pure arithmetic on its arguments so the
+    same callable serves python scalars (``governor.sweep_decision``),
+    numpy/jax arrays (``surface.sweep_decisions``) and jax tracers
+    (``parallel.executor``'s jitted decide kernel) with identical
+    floating-point rounding. ``_cap_score(sav, dt, tol)`` is the
+    projection-row view (numpy only).
+    """
+
+    name: str
+    _score: Callable[[Any, Any, Any], Any]
+    _cap_score: Callable[[Any, Any, float], Any]
+    #: grid score reads power_w (only ``perf_per_watt`` does) — lets hot
+    #: sweep loops skip the power evaluation for the objectives that
+    #: never look at it
+    needs_power: bool = False
+    #: the human-facing sense: every *score* is minimized, but
+    #: perf-per-watt is conventionally reported as a maximized value
+    #: (``value() == 1/score`` there)
+    sense: str = "min"
+    doc: str = ""
+
+    def __post_init__(self):
+        if self.sense not in ("min", "max"):
+            raise ValueError(f"sense must be 'min' or 'max', "
+                             f"got {self.sense!r}")
+
+    # ------------------------------------------------------------ grid side
+    def score(self, energy_j, time_s, power_w=None):
+        """The minimized sweep-grid score at an operating point.
+
+        Works elementwise on broadcastable arrays (or scalars / jax
+        tracers). ``power_w`` may be omitted unless :attr:`needs_power`.
+        """
+        if self.needs_power and power_w is None:
+            raise ValueError(
+                f"objective {self.name!r} scores power — pass power_w")
+        return self._score(energy_j, time_s, power_w)
+
+    def value(self, energy_j, time_s, power_w=None):
+        """The human-facing objective value: the score for minimized
+        objectives, its reciprocal for maximized ones (perf-per-watt in
+        work/(s*W) units)."""
+        s = self.score(energy_j, time_s, power_w)
+        return 1.0 / s if self.sense == "max" else s
+
+    # ------------------------------------------------------------- cap side
+    def cap_score(self, savings_pct, dt_pct, *,
+                  dt_tol_pct: float = DT0_TOL_PCT):
+        """The maximized projection-row score: metric-equivalent savings
+        (percent) of a cap whose response is (energy savings ``sav``%,
+        slowdown ``dt``%). ``objective="energy"`` returns ``savings_pct``
+        unchanged, keeping every legacy best-cap argmax bit-for-bit."""
+        return self._cap_score(savings_pct, dt_pct, dt_tol_pct)
+
+    def __repr__(self) -> str:  # keep policy reprs short
+        return f"Objective({self.name!r})"
+
+
+def _edp_cap(sav, dt, _tol):
+    # EDP_rel = energy_rel * runtime_rel; savings% = 100*(1 - EDP_rel)
+    return 100.0 * (1.0 - (1.0 - sav / 100.0) * (1.0 + dt / 100.0))
+
+
+def _ed2p_cap(sav, dt, _tol):
+    return 100.0 * (1.0 - (1.0 - sav / 100.0) * (1.0 + dt / 100.0) ** 2)
+
+
+def _dt_bounded_cap(sav, dt, tol):
+    return np.where(np.asarray(dt) <= tol, sav, -np.inf)
+
+
+#: The registry: name -> :class:`Objective`. Insertion order is the
+#: public listing order (error messages, ``SWEEP_OBJECTIVES``).
+OBJECTIVES: Dict[str, Objective] = {o.name: o for o in (
+    Objective(
+        "energy",
+        _score=lambda e, t, p: e,
+        _cap_score=lambda sav, dt, tol: sav,
+        doc="energy per step (the paper's governor objective)"),
+    Objective(
+        "edp",
+        _score=lambda e, t, p: e * t,
+        _cap_score=_edp_cap,
+        doc="energy-delay product"),
+    Objective(
+        "ed2p",
+        _score=lambda e, t, p: e * t * t,
+        _cap_score=_ed2p_cap,
+        doc="energy-delay-squared product"),
+    Objective(
+        "perf_per_watt",
+        _score=lambda e, t, p: t * p,
+        _cap_score=lambda sav, dt, tol: sav,
+        needs_power=True, sense="max",
+        doc="performance per watt (work / (time * power), maximized)"),
+    Objective(
+        "dt_bounded_savings",
+        _score=lambda e, t, p: e,
+        _cap_score=_dt_bounded_cap,
+        doc="energy savings subject to the dT<=tol no-compromise bound"),
+)}
+
+#: Every objective a frequency sweep accepts (the historical name,
+#: re-exported by ``repro.core.governor`` for compatibility).
+SWEEP_OBJECTIVES: tuple = tuple(OBJECTIVES)
+
+ObjectiveLike = Union[str, Objective]
+
+
+def get_objective(objective: ObjectiveLike, *,
+                  what: str = "objective") -> Objective:
+    """Resolve a name (or pass through an :class:`Objective`), raising
+    the one shared ``ValueError`` every layer used to re-spell."""
+    if isinstance(objective, Objective):
+        return objective
+    obj = OBJECTIVES.get(objective)
+    if obj is None:
+        raise ValueError(
+            f"unknown {what} {objective!r}; known: {SWEEP_OBJECTIVES}")
+    return obj
+
+
+def check_objective(objective: ObjectiveLike, *,
+                    what: str = "objective") -> str:
+    """Validate and canonicalize to the registry name (policies and
+    brokers store the *string* so frozen dataclasses stay hashable and
+    executor memo signatures stay value-keyed)."""
+    return get_objective(objective, what=what).name
+
+
+# ---------------------------------------------------------------------------
+# Batched evaluation over an objectives x power-caps menu
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class GridDecisions:
+    """Sweep decisions over a (objectives, power_caps, *profiles) menu —
+    the batched counterpart of nested ``surface.sweep_decisions`` calls.
+
+    Arrays are shaped ``(n_objectives, n_caps, *profile_shape)``; cell
+    ``[m, c]`` is bit-for-bit ``sweep_decisions(profiles,
+    objective=objectives[m], power_cap_w=power_caps[c], ...)``.
+    """
+
+    objectives: Tuple[str, ...]
+    power_caps: Tuple[Optional[float], ...]
+    freq_frac: np.ndarray
+    freq_mhz: np.ndarray
+    time_s: np.ndarray
+    power_w: np.ndarray
+    energy_j: np.ndarray
+    baseline_energy_j: np.ndarray
+
+    @property
+    def savings_pct(self) -> np.ndarray:
+        return 100.0 * (1.0 - self.energy_j / self.baseline_energy_j)
+
+    def objective_value(self) -> np.ndarray:
+        """Each cell's human-facing objective value (its own metric)."""
+        return np.stack([
+            np.asarray(get_objective(m).value(
+                self.energy_j[i], self.time_s[i], self.power_w[i]))
+            for i, m in enumerate(self.objectives)])
+
+
+def decision_grid(surface, profiles, *,
+                  objectives: Sequence[ObjectiveLike] = ("energy",),
+                  power_caps: Sequence[Optional[float]] = (None,),
+                  slowdown_budget: float = 0.0,
+                  n_freqs: int = 11) -> GridDecisions:
+    """Evaluate a whole objectives x power-caps sweep menu in ONE
+    transfer-surface pass.
+
+    The per-frequency ``step_time`` / ``energy_j`` / ``power_w``
+    evaluations — the expensive part — are computed once and shared by
+    every (objective, cap) cell; only the cheap score/accept lattice is
+    per-cell. Each cell reproduces the standalone
+    :meth:`~repro.power.surface.TransferSurface.sweep_decisions` call
+    bit-for-bit (same 1e-12 hysteresis, same sequential accept order,
+    same numpy pow path).
+    """
+    from repro.power.surface import ProfileArray  # import cycle: surface
+    objs = [get_objective(o, what="sweep objective") for o in objectives]
+    caps = [None if c is None else float(c) for c in power_caps]
+    xp = surface.xp
+    p = ProfileArray.coerce(profiles, xp)
+    t0 = surface.step_time(p, 1.0)
+    e0 = surface.energy_j(p, 1.0)
+    budget = t0 * (1.0 + slowdown_budget)
+    pw0 = surface.power_w(p, 1.0)
+
+    # the whole (objective, cap) lattice as stacked (M, C, *shape) arrays:
+    # each objective's score is computed once per frequency, the accept
+    # rule runs as ONE broadcast compare/where over the menu, and the
+    # winning (t, pw, e) are carried along so nothing is re-evaluated at
+    # the chosen clocks (pure functional updates, so the jax backend and
+    # 0-d profiles both work)
+    shape = (len(objs), len(caps)) + np.shape(t0)
+    bf = xp.broadcast_to(xp.ones_like(t0), shape)
+    bt = xp.broadcast_to(t0, shape)
+    be = xp.broadcast_to(e0, shape)
+    bpw = xp.broadcast_to(pw0, shape)
+    bs = xp.broadcast_to(
+        xp.stack([o.score(e0, t0, pw0) for o in objs])[:, None], shape)
+    for f in surface.chip.freq_grid(n_freqs):
+        t = surface.step_time(p, f)
+        e = surface.energy_j(p, f)
+        pw = surface.power_w(p, f)
+        t_ok = t <= budget * (1.0 + 1e-9)
+        ok_c = xp.stack([t_ok if cap is None else (t_ok & (pw <= cap))
+                         for cap in caps])                  # (C, *shape)
+        s = xp.stack([o.score(e, t, pw) for o in objs])[:, None]
+        ok = (s < bs - 1e-12) & ok_c[None]                  # (M, C, *shape)
+        bf = xp.where(ok, f, bf)
+        bt = xp.where(ok, t, bt)
+        be = xp.where(ok, e, be)
+        bpw = xp.where(ok, pw, bpw)
+        bs = xp.where(ok, s, bs)
+    mhz = xp.rint(bf * surface.spec.f_nominal_mhz).astype(int)
+    return GridDecisions(
+        objectives=tuple(o.name for o in objs), power_caps=tuple(caps),
+        freq_frac=bf, freq_mhz=mhz,
+        time_s=bt, power_w=bpw, energy_j=be,
+        baseline_energy_j=xp.broadcast_to(e0, shape))

@@ -18,9 +18,9 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional, Protocol, Union, runtime_checkable
 
-from repro.core.governor import (Decision, SWEEP_OBJECTIVES,
-                                 sweep_decision)
+from repro.core.governor import Decision, sweep_decision
 from repro.core.power_model import ChipModel, StepProfile
+from repro.power.objectives import check_objective
 from repro.power.surface import BatchDecision, ProfileArray, ProfilesLike
 
 
@@ -118,8 +118,11 @@ class EnergyAwarePolicy:
     ``PowerGovernor``) behind the policy protocol. Decisions are bit-for-bit
     those of ``PowerGovernor.choose`` — both call
     :func:`repro.core.governor.sweep_decision`. ``objective`` swaps the
-    swept metric (``"energy"`` default / ``"edp"`` / ``"perf_per_watt"``,
-    the capping-metric axis of arXiv:2505.21758) on the same grid."""
+    swept metric on the same grid — any name in the shared registry
+    :data:`repro.power.objectives.OBJECTIVES` (``"energy"`` default /
+    ``"edp"`` / ``"ed2p"`` / ``"perf_per_watt"`` /
+    ``"dt_bounded_savings"``, the capping-metric axis of
+    arXiv:2505.21758)."""
 
     slowdown_budget: float = 0.0
     n_freqs: int = 11
@@ -130,9 +133,7 @@ class EnergyAwarePolicy:
     def __post_init__(self):
         if self.n_freqs < 1:
             raise ValueError(f"n_freqs must be >= 1, got {self.n_freqs}")
-        if self.objective not in SWEEP_OBJECTIVES:
-            raise ValueError(f"unknown objective {self.objective!r}; "
-                             f"known: {SWEEP_OBJECTIVES}")
+        check_objective(self.objective)
 
     def decide(self, profile: StepProfile, chip: ChipModel) -> Decision:
         return sweep_decision(profile, chip,

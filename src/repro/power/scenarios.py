@@ -72,6 +72,7 @@ from __future__ import annotations
 import dataclasses
 import re
 from dataclasses import dataclass
+from statistics import NormalDist
 from functools import lru_cache
 from typing import (Any, Callable, Dict, Iterable, Iterator, List, Optional,
                     Sequence, Tuple, Union)
@@ -86,6 +87,7 @@ from repro.core.projection import (ProjectionRow, ResponseTables,
                                    check_tables_kind, project)
 from repro.core.telemetry import TelemetryStore
 from repro.power.jobs import FleetJobsReport, JobTable
+from repro.power.objectives import check_objective, get_objective
 from repro.power.policies import PolicyLike, PowerPolicy, get_policy
 
 # ---------------------------------------------------------------------------
@@ -429,6 +431,11 @@ class Scenario:
     broker: Any = None                   # a broker spec -> a "broker" cell
     budget_mw: Optional[float] = None    # facility budget (None = unbounded)
     n_nodes: int = 10_000                # broker cells: the node pool
+    #: the cell's optimization metric (a :data:`repro.power.objectives`
+    #: registry name) — re-parameterizes name-resolved policies/brokers and
+    #: drives the cap selection of schedule cells; every cell reports its
+    #: metric-equivalent savings as ``objective_pct``
+    objective: str = "energy"
 
     def resolved_chip(self) -> ChipSpec:
         return self.workload.chip if self.chip is None \
@@ -439,8 +446,20 @@ class Scenario:
             return None
         if isinstance(self.policy, tuple):
             name, knobs = self.policy
-            return get_policy(name, **dict(knobs))
-        return get_policy(self.policy)
+            knobs = dict(knobs)
+            p = get_policy(name, **knobs)
+            from_spec, pinned = True, "objective" in knobs
+        else:
+            p = get_policy(self.policy)
+            from_spec, pinned = isinstance(self.policy, str), False
+        # the metrics axis re-parameterizes policies the Study resolved
+        # itself (a name / (name, knobs) spec whose knobs left the
+        # objective alone); a policy OBJECT is the caller's — never mutated
+        if (self.objective != "energy" and from_spec and not pinned
+                and dataclasses.is_dataclass(p)
+                and getattr(p, "objective", None) == "energy"):
+            p = dataclasses.replace(p, objective=self.objective)
+        return p
 
     def resolved_tables(self) -> Optional[ResponseTables]:
         return resolve_tables(self.tables, kind=self.kind,
@@ -459,7 +478,15 @@ class Scenario:
                 and isinstance(self.broker[0], str) \
                 and isinstance(self.broker[1], dict):
             name, knobs = self.broker
-            return get_broker(name, **dict(knobs))
+            knobs = dict(knobs)
+            if self.objective != "energy":
+                knobs.setdefault("objective", self.objective)
+            return get_broker(name, **knobs)
+        if isinstance(self.broker, str) and self.objective != "energy":
+            try:
+                return get_broker(self.broker, objective=self.objective)
+            except TypeError:
+                pass     # broker takes no objective knob (e.g. uniform)
         return get_broker(self.broker)
 
     @property
@@ -512,18 +539,26 @@ class CellResult:
     label: str = ""
     budget_mw: float = float("nan")             # broker cells only
     throughput_jobs_per_h: float = float("nan")  # broker cells only
+    #: the cell's optimization metric and its metric-equivalent savings %
+    #: (equal to ``savings_pct`` for the default ``"energy"``)
+    metric: str = "energy"
+    objective_pct: float = float("nan")
+    #: back-reference to the evaluated scenario — what ``confidence()``
+    #: resamples (per-job structure lives on the workload)
+    scenario: Any = None
 
     def to_dict(self) -> Dict:
         d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)
-             if f.name not in ("detail", "projection")}
+             if f.name not in ("detail", "projection", "scenario")}
         d["cap"] = cap_label(self.cap)
         return d
 
 
 _METRICS = ("savings_pct", "dt_pct", "savings_mwh", "total_energy_mwh",
             "savings_dt0_pct", "model_bias_pct", "budget_mw",
-            "throughput_jobs_per_h")
-_INDEX = ("workload", "chip", "policy", "kind", "tables", "cell", "label")
+            "throughput_jobs_per_h", "objective_pct")
+_INDEX = ("workload", "chip", "policy", "kind", "tables", "cell", "label",
+          "metric")
 _ALIASES = {
     "dt": "dt_pct", "dT": "dt_pct", "slowdown": "dt_pct",
     "savings": "savings_pct", "sav": "savings_pct",
@@ -534,6 +569,7 @@ _ALIASES = {
     "energy": "total_energy_mwh",
     "budget": "budget_mw", "throughput": "throughput_jobs_per_h",
     "jobs_per_h": "throughput_jobs_per_h",
+    "objective": "objective_pct", "obj": "objective_pct",
 }
 _CONSTRAINT_RE = re.compile(
     r"^\s*([A-Za-z_][A-Za-z0-9_]*)\s*(<=|>=|==|!=|<|>)\s*"
@@ -548,6 +584,95 @@ def _metric_name(name: str) -> str:
         raise KeyError(f"unknown metric {name!r}; known: {_METRICS} "
                        f"(+ aliases {sorted(_ALIASES)})")
     return resolved
+
+
+@dataclass(frozen=True)
+class ConfidenceInterval:
+    """One cell's resampled interval for one statistic. ``n`` is the number
+    of jobs resampled — 0 means the cell carries no per-job structure (the
+    interval is then ``(nan, nan)`` around the point value). Supports
+    ``8.5 in ci`` containment tests."""
+
+    stat: str
+    value: float
+    lo: float
+    hi: float
+    method: str
+    n: int
+
+    def __contains__(self, x) -> bool:
+        return bool(self.lo <= float(x) <= self.hi)
+
+    def __str__(self) -> str:
+        return (f"{self.stat}={self.value:.3f} "
+                f"[{self.lo:.3f}, {self.hi:.3f}] "
+                f"({self.method}, n={self.n})")
+
+
+def _job_contributions(cell: CellResult, stat: str
+                       ) -> Optional[Tuple[np.ndarray,
+                                           Optional[np.ndarray], float]]:
+    """Per-job contribution vectors ``(num, den, scale)`` such that the
+    cell's ``stat`` equals ``scale * num.sum() / den.sum()`` (``den=None``
+    means a plain total: ``scale * num.sum()``). Resampling jobs therefore
+    reduces to resampling these sums — exact because the projection engine
+    is linear in per-job modal energies (``project_batch``). Returns None
+    when the cell has no per-job structure or the stat is not job-borne
+    (cap schedules stay FIXED at the full-population choice: the interval
+    is conditional on the schedule, not on re-picking caps per resample)."""
+    s = cell.scenario
+    if s is None:
+        return None
+    if cell.cell == REPLAY:
+        rows = getattr(cell.detail, "jobs", None)
+        if not rows:
+            return None
+        base = np.array([r.energy_base_j for r in rows], dtype=np.float64)
+        sav = np.array([r.savings_pct for r in rows], dtype=np.float64)
+        if stat == "savings_pct":
+            return base * sav / 100.0, base, 100.0
+        if stat == "savings_mwh":
+            return base * sav / 100.0 / 3.6e9, None, 1.0
+        if stat == "dt_pct":
+            t = np.array([r.time_rec_s for r in rows], dtype=np.float64)
+            dt = np.array([r.dt_pct for r in rows], dtype=np.float64)
+            return t * dt / 100.0, t, 100.0
+        return None
+    if cell.cell not in (PROJECT, SCHEDULE) or stat not in (
+            "savings_pct", "savings_mwh", "savings_dt0_pct"):
+        return None
+    try:
+        fleet = s.workload.fleet()
+        decomp = fleet.per_job()
+    except ValueError:
+        return None                      # no per-job view on this workload
+    e_tot = np.asarray(decomp.total_energy_mwh, dtype=np.float64)
+    tables = s.resolved_tables()
+    if cell.cell == PROJECT:
+        bp = fleet.project_jobs([float(s.cap)], s.kind, tables=tables)
+        sav = bp.total_mwh[:, 0]
+        sav0 = bp.savings_dt0_pct[:, 0] / 100.0 * np.maximum(e_tot, 1e-12)
+    else:                                # SCHEDULE: per-class caps
+        rep: FleetJobsReport = cell.detail
+        cls_idx = fleet.job_classes()
+        caps_used = sorted({c.cap for c in rep.classes if c.cap is not None})
+        sav = np.zeros_like(e_tot)
+        sav0 = np.zeros_like(e_tot)
+        if caps_used:
+            bp = fleet.project_jobs(caps_used, rep.kind, tables=tables)
+            col = {c: k for k, c in enumerate(caps_used)}
+            for i, cr in enumerate(rep.classes):
+                if cr.cap is None:
+                    continue
+                members = cls_idx == i
+                sav[members] = bp.total_mwh[members, col[cr.cap]]
+                if cr.meets_dt0:
+                    sav0[members] = sav[members]
+    if stat == "savings_pct":
+        return sav, e_tot, 100.0
+    if stat == "savings_mwh":
+        return sav, None, 1.0
+    return sav0, e_tot, 100.0
 
 
 class StudyResult:
@@ -692,6 +817,66 @@ class StudyResult:
         keep.sort(key=lambda i: (-xs[i], -ys[i]))
         return StudyResult([self.cells[i] for i in keep])
 
+    # ------------------------------------------------------------ resampling
+    def confidence(self, stat: str = "savings_pct", *, n_boot: int = 1000,
+                   method: str = "bootstrap", alpha: float = 0.05,
+                   seed: int = 0) -> List[ConfidenceInterval]:
+        """Per-cell error bars for ``stat``, resampled over *jobs* — one
+        :class:`ConfidenceInterval` per cell, aligned with ``self.cells``.
+
+        Because the projection engine is linear in per-job modal energies,
+        a resample's statistic is exactly the ratio of resampled per-job
+        sums (:func:`_job_contributions`), so the bootstrap never re-runs
+        the engine: ``method="bootstrap"`` draws ``n_boot`` multinomial
+        job-count vectors and reports the percentile interval at level
+        ``1 - alpha``; ``method="jackknife"`` reports the leave-one-out
+        normal-approximation interval. Cap schedules stay fixed at the
+        full-population choice (the interval is conditional on the
+        schedule). Cells without per-job structure (broker cells, flat
+        power arrays, bare energies, a stat the cell doesn't resample)
+        come back with ``n=0`` and a ``(nan, nan)`` interval around the
+        point value."""
+        name = _metric_name(stat)
+        if method not in ("bootstrap", "jackknife"):
+            raise ValueError(f"method must be 'bootstrap' or 'jackknife', "
+                             f"got {method!r}")
+        rng = np.random.default_rng(seed)
+        z = NormalDist().inv_cdf(1.0 - alpha / 2.0)
+        out: List[ConfidenceInterval] = []
+        for c in self.cells:
+            contrib = _job_contributions(c, name)
+            if contrib is None or not len(contrib[0]):
+                out.append(ConfidenceInterval(
+                    name, float(getattr(c, name)), float("nan"),
+                    float("nan"), method, 0))
+                continue
+            num, den, scale = contrib
+            n = len(num)
+            tot_n = float(num.sum())
+            if den is None:
+                value = scale * tot_n
+            else:
+                value = scale * tot_n / float(den.sum())
+            if method == "bootstrap":
+                counts = rng.multinomial(
+                    n, np.full(n, 1.0 / n), size=n_boot
+                ).astype(np.float64)
+                stats = scale * (counts @ num)
+                if den is not None:
+                    stats = stats / (counts @ den)
+                lo, hi = np.percentile(
+                    stats, [100.0 * alpha / 2.0, 100.0 * (1 - alpha / 2.0)])
+            else:
+                theta = scale * (tot_n - num)         # leave-one-out stats
+                if den is not None:
+                    theta = theta / (float(den.sum()) - den)
+                se = np.sqrt((n - 1) / n
+                             * float(np.sum((theta - theta.mean()) ** 2)))
+                lo, hi = value - z * se, value + z * se
+            out.append(ConfidenceInterval(name, value, float(lo), float(hi),
+                                          method, n))
+        return out
+
     # ----------------------------------------------------------- pivot views
     def pivot(self, rows: str = "cap", cols: str = "chip",
               value: str = "savings_pct"
@@ -809,6 +994,17 @@ class Study:
     exclusive (a policy can still be an axis *value* of ``brokers`` — it
     rides along as a :class:`~repro.power.broker.PolicyBroker`).
 
+    ``metrics`` is the objective axis: each value names a
+    :data:`repro.power.objectives` registry entry (``"energy"`` / ``"edp"``
+    / ``"ed2p"`` / ``"perf_per_watt"`` / ``"dt_bounded_savings"``). Cells
+    re-parameterize name-resolved policies/brokers with the metric, drive
+    schedule cells' per-class cap choice through its ``cap_score``, and
+    report the metric-equivalent savings as the ``objective_pct`` column
+    (with ``metric`` as a new index column) — ``metrics=["energy"]`` (or no
+    axis) is bit-for-bit the legacy grid, and grouped passes (projection,
+    replay) are still shared across metrics wherever the underlying run is
+    metric-independent.
+
     Pass ``scenarios=[Scenario(...), ...]`` instead of axes for a
     non-cartesian grid.
     """
@@ -817,7 +1013,7 @@ class Study:
                  kind: str = "freq", tables: TablesLike = "auto",
                  brokers=None, budgets_mw=None, n_nodes: int = 10_000,
                  scenarios: Optional[Sequence[Scenario]] = None,
-                 executor=None, devices=None):
+                 executor=None, devices=None, metrics=None):
         # executor/devices are execution knobs, not grid axes: replay
         # cells run their per-shard infer/decide pass on the sharded jax
         # backend (repro.parallel.ShardedExecutor), bit-for-bit the numpy
@@ -830,10 +1026,12 @@ class Study:
             if workloads is not None or chips is not None \
                     or policies is not None or caps is not None \
                     or brokers is not None or budgets_mw is not None \
+                    or metrics is not None \
                     or kind != "freq" or tables != "auto":
                 raise ValueError(
                     "pass either axes or scenarios=, not both — with "
-                    "scenarios= each Scenario carries its own kind/tables")
+                    "scenarios= each Scenario carries its own kind/tables/"
+                    "objective")
             self._scenarios = list(scenarios)
             return
         if workloads is None:
@@ -865,16 +1063,21 @@ class Study:
         if isinstance(budgets_mw, np.ndarray):
             budgets_mw = budgets_mw.tolist()
         bud_axis = _aslist("budgets_mw", budgets_mw)
+        # the metrics axis: each value is an objectives-registry name; the
+        # default (no axis) is the legacy energy objective
+        met_axis = ["energy" if m is None else check_objective(m)
+                    for m in _aslist("metrics", metrics)]
         self._scenarios = [
             Scenario(workload=w, chip=ch, policy=p, cap=c, kind=kind,
                      tables=tables, broker=b, budget_mw=bud,
-                     n_nodes=n_nodes)
+                     n_nodes=n_nodes, objective=m)
             for w in _aslist("workloads", workloads)
             for ch in _aslist("chips", chips)
             for p in pol_axis
             for c in caps_axis
             for b in brk_axis
-            for bud in bud_axis]
+            for bud in bud_axis
+            for m in met_axis]
 
     def scenarios(self) -> List[Scenario]:
         return list(self._scenarios)
@@ -896,6 +1099,11 @@ class Study:
         cells = self._scenarios
         resolved = [(s, s.resolved_chip(), s.resolved_policy(),
                      s.resolved_tables()) for s in cells]
+
+        def _obj_pct(objective: str, sav: float, dt: float) -> float:
+            """The cell's metric-equivalent savings % (cap_score)."""
+            return float(get_objective(objective).cap_score(
+                np.float64(sav), np.float64(dt)))
 
         # ---- one batched projection pass per (workload, tables, kind)
         proj_groups: Dict[tuple, dict] = {}
@@ -942,7 +1150,7 @@ class Study:
             base = dict(workload=s.workload.name, chip=chip.name,
                         policy=_policy_label(policy), cap=s.cap,
                         kind=s.kind, tables=_tables_source(tables),
-                        label=s.label)
+                        label=s.label, metric=s.objective, scenario=s)
             if s.cell == BROKER:
                 from repro.power.broker import simulate_cluster
                 rep = simulate_cluster(
@@ -958,41 +1166,57 @@ class Study:
                     model_bias_pct=float("nan"),
                     budget_mw=rep.budget_mw,
                     throughput_jobs_per_h=rep.throughput_jobs_per_h,
+                    objective_pct=_obj_pct(s.objective, rep.savings_pct,
+                                           rep.dt_pct),
                     detail=rep, **base))
             elif s.cell == PROJECT:
                 row = proj_rows[(id(s.workload), id(tables), s.kind)][
                     float(s.cap)]
+                if s.objective != row.objective:
+                    # annotate a per-cell copy: the projection pass is
+                    # shared across the metrics axis
+                    row = dataclasses.replace(
+                        row, objective=s.objective,
+                        objective_pct=_obj_pct(s.objective, row.savings_pct,
+                                               row.dt_pct))
                 _, _, e_tot = s.workload.energies_mwh()
                 out.append(CellResult(
                     cell=PROJECT, savings_pct=row.savings_pct,
                     dt_pct=row.dt_pct, savings_mwh=row.total_mwh,
                     total_energy_mwh=e_tot,
                     savings_dt0_pct=row.savings_dt0_pct,
-                    model_bias_pct=float("nan"), detail=row, **base))
+                    model_bias_pct=float("nan"),
+                    objective_pct=row.objective_pct, detail=row, **base))
             elif s.cell == SCHEDULE:
-                skey = (id(s.workload), id(tables), s.kind,
+                skey = (id(s.workload), id(tables), s.kind, s.objective,
                         None if s.cap is None else tuple(s.caps_list()))
                 if skey not in schedule_reports:
                     schedule_reports[skey] = s.workload.fleet().job_report(
-                        s.caps_list(), s.kind, tables=tables)
+                        s.caps_list(), s.kind, tables=tables,
+                        objective=s.objective)
                 rep: FleetJobsReport = schedule_reports[skey]
                 e_tot = rep.total_energy_mwh
                 w_dt = sum(c.dt_pct * c.energy_mwh for c in rep.classes)
+                dt_pct = w_dt / max(e_tot, 1e-12)
                 out.append(CellResult(
                     cell=SCHEDULE, savings_pct=rep.savings_pct,
-                    dt_pct=w_dt / max(e_tot, 1e-12),
+                    dt_pct=dt_pct,
                     savings_mwh=rep.total_savings_mwh,
                     total_energy_mwh=e_tot,
                     savings_dt0_pct=100.0 * rep.dt0_savings_mwh
                     / max(e_tot, 1e-12),
-                    model_bias_pct=float("nan"), detail=rep, **base))
+                    model_bias_pct=float("nan"),
+                    objective_pct=_obj_pct(s.objective, rep.savings_pct,
+                                           dt_pct),
+                    detail=rep, **base))
             else:
                 rep = replay_reports[(id(s.workload), _policy_key(policy),
                                       chip)]
                 projection = None
                 if s.cap is not None:
                     projection = rep.project(s.caps_list(), s.kind,
-                                             tables=tables)
+                                             tables=tables,
+                                             objective=s.objective)
                 out.append(CellResult(
                     cell=REPLAY, savings_pct=rep.savings_pct,
                     dt_pct=rep.dt_pct,
@@ -1000,6 +1224,8 @@ class Study:
                     / 3.6e9,
                     total_energy_mwh=rep.energy_base_j / 3.6e9,
                     savings_dt0_pct=float("nan"),
-                    model_bias_pct=rep.model_bias_pct, detail=rep,
-                    projection=projection, **base))
+                    model_bias_pct=rep.model_bias_pct,
+                    objective_pct=_obj_pct(s.objective, rep.savings_pct,
+                                           rep.dt_pct),
+                    detail=rep, projection=projection, **base))
         return StudyResult(out)

@@ -582,18 +582,22 @@ class ReplayReport:
         return {r.job_id: r for r in self.jobs}
 
     def project(self, caps: Optional[Sequence[float]] = None,
-                kind: str = "freq", tables=None) -> List[ProjectionRow]:
+                kind: str = "freq", tables=None,
+                objective: str = "energy") -> List[ProjectionRow]:
         """Cap-schedule projection of the *recorded* trace (another
         scenario axis on the same replayed stream — no re-ingestion).
         ``tables`` accepts any :data:`repro.power.scenarios.TablesLike`;
-        this is what a Study replay cell with a ``cap`` attaches."""
+        this is what a Study replay cell with a ``cap`` attaches.
+        ``objective`` annotates each row with its metric-equivalent
+        savings % (``objective_pct``)."""
         from repro.power.jobs import default_caps
         from repro.power.scenarios import resolve_tables
         tables = resolve_tables(tables, kind=kind, chip=self.chip_spec)
         caps = list(caps) if caps is not None else list(
             default_caps(kind, tables))
         return project_from_decomposition(self.recorded, caps, kind,
-                                          tables=tables)
+                                          tables=tables,
+                                          objective=objective)
 
     def __str__(self) -> str:
         lines = [
@@ -618,7 +622,8 @@ def replay(stream: Iterable[ShardLike], policy: PolicyLike,
            chip=MI250X_GCD, *, record_chip=None,
            tables: Optional[ResponseTables] = None,
            caps: Optional[Sequence[float]] = None, kind: str = "freq",
-           sample_interval_s: float = 15.0, executor=None, **policy_knobs
+           sample_interval_s: float = 15.0, executor=None,
+           objective: Optional[str] = None, **policy_knobs
            ) -> ReplayReport:
     """Re-run a recorded telemetry stream under ``policy`` on ``chip`` —
     the single-cell view of a replay :class:`repro.power.Scenario`.
@@ -640,6 +645,11 @@ def replay(stream: Iterable[ShardLike], policy: PolicyLike,
     doesn't support (:meth:`ShardedExecutor.supports`) silently use the
     numpy path.
 
+    ``objective``: swap the swept metric of a name-resolved policy (any
+    registry name, :mod:`repro.power.objectives`) — shorthand for the
+    ``objective=`` policy knob; policy *objects* are never mutated (their
+    own ``objective`` wins, and a conflicting request raises).
+
     ``tables`` / ``caps`` / ``kind`` (deprecated): attach the response-
     table projection of the recorded trace to the report. Call
     :meth:`ReplayReport.project` — or give the Scenario a ``cap`` — for
@@ -648,6 +658,16 @@ def replay(stream: Iterable[ShardLike], policy: PolicyLike,
     model = ChipModel(chip)
     rec_model = ChipModel(record_chip) if record_chip is not None else model
     surf_rec = rec_model.surface()
+    if objective is not None:
+        from repro.power.objectives import check_objective
+        objective = check_objective(objective)
+        if policy is None or isinstance(policy, str):
+            policy_knobs.setdefault("objective", objective)
+        elif getattr(policy, "objective", objective) != objective:
+            raise ValueError(
+                f"policy object {getattr(policy, 'name', policy)!r} has "
+                f"objective={policy.objective!r}; pass objective= only "
+                f"with name-resolved policies or matching objects")
     pol = get_policy(policy, **policy_knobs)
     exec_decides = executor is not None and executor.supports(pol)
     rec_acc = StreamingModal(rec_model.spec, sample_interval_s,

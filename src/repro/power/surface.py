@@ -370,31 +370,24 @@ class TransferSurface:
         bit-for-bit a Python loop of
         :func:`repro.core.governor.sweep_decision` (same grid, same
         sequential accept rule with its 1e-12 improvement hysteresis, same
-        ``objective`` spellings: energy / edp / perf_per_watt)."""
-        from repro.core.governor import SWEEP_OBJECTIVES
-        if objective not in SWEEP_OBJECTIVES:
-            raise ValueError(f"unknown sweep objective {objective!r}; "
-                             f"known: {SWEEP_OBJECTIVES}")
+        ``objective`` registry: :data:`repro.power.objectives.OBJECTIVES`).
+        """
+        from repro.power.objectives import get_objective
+        obj = get_objective(objective, what="sweep objective")
         xp = self.xp
         p = ProfileArray.coerce(profiles, xp)
         t0 = self.step_time(p, 1.0)
         e0 = self.energy_j(p, 1.0)
         budget = t0 * (1.0 + slowdown_budget)
-
-        def score(e, t, f):
-            if objective == "edp":
-                return e * t
-            if objective == "perf_per_watt":
-                return t * self.power_w(p, f)
-            return e
+        need_pw = obj.needs_power
 
         best_f = xp.ones_like(t0)
         best_e = e0
-        best_s = score(e0, t0, 1.0)
+        best_s = obj.score(e0, t0, self.power_w(p, 1.0) if need_pw else None)
         for f in self.chip.freq_grid(n_freqs):
             t = self.step_time(p, f)
             e = self.energy_j(p, f)
-            s = score(e, t, f)
+            s = obj.score(e, t, self.power_w(p, f) if need_pw else None)
             ok = (s < best_s - 1e-12) & (t <= budget * (1.0 + 1e-9))
             if power_cap_w is not None:
                 ok = ok & (self.power_w(p, f) <= power_cap_w)

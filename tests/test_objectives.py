@@ -1,0 +1,311 @@
+"""The objective registry (`repro.power.objectives`): golden pre-refactor
+parity (every ``objective="energy"`` decision, cap schedule and broker run
+must be bit-for-bit what the pre-registry code produced), grid/batch
+equivalence of :func:`decision_grid`, sweep-optimality properties, and the
+metric-driven Study axis with bootstrap/jackknife error bars."""
+import numpy as np
+import pytest
+from conftest import given, settings, st  # hypothesis, or skip-stubs
+from golden_objectives import (GOLDEN_BROKER, GOLDEN_DECISIONS,
+                               GOLDEN_SCHEDULE, GOLDEN_SWEEPS)
+
+from repro.core.governor import sweep_decision
+from repro.core.modal import synth_fleet_powers
+from repro.power import (ChipModel, ClusterTrace, EnergyAwarePolicy,
+                         FleetAnalysis, GreedyValueBroker, OBJECTIVES,
+                         SWEEP_OBJECTIVES, StepProfile, Study, Workload,
+                         decision_grid, get_objective, get_policy,
+                         iter_array, project, replay, simulate_cluster)
+
+PROFILES = [
+    StepProfile(compute_s=0.2, memory_s=1.0),
+    StepProfile(compute_s=1.0, memory_s=0.3),
+    StepProfile(compute_s=0.8, memory_s=0.8, collective_s=0.2),
+    StepProfile(compute_s=0.5, memory_s=0.1, collective_s=0.05),
+    StepProfile(compute_s=0.05, memory_s=0.9, collective_s=0.3),
+]
+POLICY_SPECS = [
+    ("nominal", {}),
+    ("static", {"freq_mhz": 1100}),
+    ("power-cap", {"cap_w": 400.0}),
+    ("energy-aware", {"slowdown_budget": 0.10}),
+    ("energy-aware", {"slowdown_budget": 0.25, "objective": "edp"}),
+    ("energy-aware", {"slowdown_budget": 0.05, "objective": "perf_per_watt",
+                      "power_cap_w": 450.0}),
+]
+
+
+# ------------------------------------------------------------ the registry
+def test_registry_is_the_one_validator():
+    assert SWEEP_OBJECTIVES == ("energy", "edp", "ed2p", "perf_per_watt",
+                                "dt_bounded_savings")
+    assert tuple(OBJECTIVES) == SWEEP_OBJECTIVES
+    with pytest.raises(ValueError, match="unknown objective 'nope'"):
+        get_objective("nope")
+    # the shared message lists every known name
+    with pytest.raises(ValueError, match="perf_per_watt"):
+        get_objective("nope")
+    # and every historical entry point routes through it
+    with pytest.raises(ValueError, match="objective"):
+        EnergyAwarePolicy(objective="nope")
+    with pytest.raises(ValueError, match="objective"):
+        sweep_decision(PROFILES[0], ChipModel("tpu-v5e"), objective="nope")
+    with pytest.raises(ValueError, match="objective"):
+        GreedyValueBroker(objective="nope")
+    with pytest.raises(ValueError, match="objective"):
+        Study(workloads=[Workload.from_powers([300.0])], caps=[900.0],
+              metrics=["nope"])
+
+
+def test_objective_score_and_cap_score_shapes():
+    e, t, p = 100.0, 2.0, 50.0
+    assert get_objective("energy").score(e, t) == e
+    assert get_objective("edp").score(e, t) == e * t
+    assert get_objective("ed2p").score(e, t) == e * t * t
+    assert get_objective("perf_per_watt").score(e, t, p) == t * p
+    with pytest.raises(ValueError, match="power"):
+        get_objective("perf_per_watt").score(e, t)
+    # energy / perf_per_watt cap scores are the identity on savings —
+    # the exact property that keeps every legacy argmax bit-for-bit
+    sav = np.array([1.0, 8.5, -2.0])
+    dt = np.array([0.0, 0.4, 11.0])
+    for name in ("energy", "perf_per_watt"):
+        assert np.array_equal(
+            get_objective(name).cap_score(sav, dt), sav)
+    masked = get_objective("dt_bounded_savings").cap_score(sav, dt)
+    assert np.array_equal(masked, np.array([1.0, 8.5, -np.inf]))
+
+
+# ------------------------------------------------- golden bit-for-bit parity
+def test_golden_policy_decisions_bitforbit():
+    """Every built-in policy on every chip reproduces the pre-refactor
+    decisions exactly — the registry seam changed no bits."""
+    for chip_name in ("mi250x-gcd", "tpu-v5e"):
+        chip = ChipModel(chip_name)
+        for pname, knobs in POLICY_SPECS:
+            pol = get_policy(pname, **knobs)
+            for i, prof in enumerate(PROFILES):
+                d = pol.decide(prof, chip)
+                want = GOLDEN_DECISIONS[
+                    (chip_name, pname, tuple(sorted(knobs.items())), i)]
+                got = (d.freq_mhz, d.freq_frac, d.time_s, d.power_w,
+                       d.energy_j, d.baseline_energy_j)
+                assert got == want, (chip_name, pname, knobs, i)
+
+
+def test_golden_sweep_decisions_bitforbit():
+    chip = ChipModel("mi250x-gcd")
+    for (obj, cap, i), want in GOLDEN_SWEEPS.items():
+        d = sweep_decision(PROFILES[i], chip, slowdown_budget=0.15,
+                           n_freqs=13, power_cap_w=cap, objective=obj)
+        assert (d.freq_mhz, d.freq_frac, d.energy_j) == want, (obj, cap, i)
+
+
+def test_golden_broker_bitforbit():
+    trace = ClusterTrace.synthetic(120, seed=3)
+    for obj, want in GOLDEN_BROKER.items():
+        rep = simulate_cluster(trace, GreedyValueBroker(objective=obj),
+                               budget_mw=0.8, n_nodes=10_000, kind="power")
+        assert (rep.savings_pct, rep.dt_pct, rep.savings_mwh) == want, obj
+
+
+def test_golden_class_schedule_bitforbit():
+    rep = FleetAnalysis.synthetic_jobs(400, seed=0).job_report()
+    assert rep.objective == "energy"
+    for c in rep.classes:
+        assert (c.cap, c.savings_pct, c.dt_pct) == \
+            GOLDEN_SCHEDULE[c.job_class], c.job_class
+    assert (rep.savings_pct, rep.total_savings_mwh) == \
+        GOLDEN_SCHEDULE["_agg"]
+
+
+def test_executor_replay_parity_across_objectives():
+    """The jitted decide kernel memoizes per (policy kind, objective, cap)
+    — replay through the executor stays bit-for-bit numpy for objective
+    policies too."""
+    from repro.parallel import ShardedExecutor
+    ex = ShardedExecutor()
+    powers = np.round(synth_fleet_powers(400, seed=5) * 10.0) / 10.0
+    for knobs in ({"slowdown_budget": 0.05},
+                  {"slowdown_budget": 0.05, "objective": "edp"}):
+        pol = get_policy("energy-aware", **knobs)
+        a = replay(iter_array(powers), pol)
+        b = replay(iter_array(powers), pol, executor=ex)
+        assert a.energy_new_j == b.energy_new_j
+        assert a.time_new_s == b.time_new_s
+
+
+# ------------------------------------------------- batched grid evaluation
+def test_decision_grid_matches_per_cell_sweeps_bitforbit():
+    chip = ChipModel("mi250x-gcd")
+    surf = chip.surface()
+    caps = (None, 420.0)
+    gd = decision_grid(surf, PROFILES, objectives=SWEEP_OBJECTIVES,
+                       power_caps=caps, slowdown_budget=0.15, n_freqs=13)
+    assert gd.freq_frac.shape == (len(SWEEP_OBJECTIVES), len(caps),
+                                  len(PROFILES))
+    for mi, obj in enumerate(SWEEP_OBJECTIVES):
+        for ci, cap in enumerate(caps):
+            bd = surf.sweep_decisions(PROFILES, slowdown_budget=0.15,
+                                      n_freqs=13, power_cap_w=cap,
+                                      objective=obj)
+            assert np.array_equal(gd.freq_frac[mi, ci],
+                                  np.asarray(bd.freq_frac)), (obj, cap)
+            assert np.array_equal(gd.energy_j[mi, ci],
+                                  np.asarray(bd.energy_j)), (obj, cap)
+    # objective_value is finite and positive on this menu
+    assert np.isfinite(gd.objective_value()).all()
+    assert np.isfinite(gd.savings_pct).all()
+
+
+# ---------------------------------------------------- sweep optimality law
+@settings(max_examples=60, deadline=None)
+@given(c=st.floats(1e-3, 3.0), m=st.floats(1e-3, 3.0),
+       x=st.floats(0.0, 1.0), budget=st.floats(0.0, 0.5),
+       obj=st.sampled_from(SWEEP_OBJECTIVES),
+       cap=st.sampled_from([None, 420.0]))
+def test_sweep_choice_lies_on_grid_and_is_grid_optimal(c, m, x, budget,
+                                                       obj, cap):
+    """The chosen frequency is a grid point (or the nominal baseline) and
+    its score is minimal over the feasible grid — i.e. the objective value
+    is minimal (maximal for the maximized perf-per-watt) among candidates
+    meeting the slowdown budget and power cap."""
+    chip = ChipModel("mi250x-gcd")
+    prof = StepProfile(c, m, x)
+    o = get_objective(obj)
+    d = sweep_decision(prof, chip, slowdown_budget=budget, n_freqs=9,
+                       power_cap_w=cap, objective=obj)
+    candidates = [1.0] + [float(f) for f in chip.freq_grid(9)]
+    assert any(abs(d.freq_frac - f) < 1e-12 for f in candidates)
+    t0 = chip.step_time(prof, 1.0)
+    feasible = []
+    for f in candidates[1:]:
+        t = chip.step_time(prof, f)
+        if t > t0 * (1.0 + budget) * (1.0 + 1e-9):
+            continue
+        if cap is not None and chip.power_w(prof, f) > cap:
+            continue
+        feasible.append(o.score(chip.energy_j(prof, f), t,
+                                chip.power_w(prof, f)))
+    chosen = o.score(d.energy_j, d.time_s, d.power_w)
+    best = min([o.score(chip.energy_j(prof, 1.0), t0,
+                        chip.power_w(prof, 1.0))] + feasible)
+    assert chosen <= best + 1e-9 * max(1.0, abs(best))
+
+
+# ------------------------------------------- metric-driven studies + CIs
+@pytest.fixture(scope="module")
+def jobs_workload():
+    return Workload.synthetic_jobs(250, seed=0)
+
+
+def test_study_metrics_axis_energy_is_bitforbit(jobs_workload):
+    base = Study(workloads=[jobs_workload], caps=[900.0, None]).run()
+    res = Study(workloads=[jobs_workload], caps=[900.0, None],
+                metrics=["energy", "edp", "perf_per_watt"]).run()
+    assert len(res) == 3 * len(base)
+    en = res.filter(metric="energy")
+    assert [c.metric for c in base] == ["energy"] * len(base)
+    for a, b in zip(base, en):
+        assert a.savings_pct == b.savings_pct
+        assert a.dt_pct == b.dt_pct
+        assert a.savings_mwh == b.savings_mwh
+        # for energy the metric-equivalent savings IS the savings
+        assert b.objective_pct == b.savings_pct
+
+
+def test_study_metric_drives_schedule_and_columns(jobs_workload):
+    res = Study(workloads=[jobs_workload], caps=[None],
+                metrics=["energy", "edp"]).run()
+    en, edp = res.filter(metric="energy")[0], res.filter(metric="edp")[0]
+    assert en.detail.objective == "energy"
+    assert edp.detail.objective == "edp"
+    # EDP discounts savings by the slowdown factor, so its
+    # metric-equivalent savings sit strictly below raw savings whenever
+    # the schedule slows anything down
+    assert edp.objective_pct < edp.savings_pct
+    # columnar access: objective_pct is a metric, metric an index column
+    assert np.isfinite(res.objective_pct).all()
+    assert res.column("metric") == ["energy", "edp"]
+    assert str(res.best(by="objective_pct").metric) in ("energy", "edp")
+
+
+def test_study_metrics_reparameterize_name_resolved_policies(jobs_workload):
+    res = Study(workloads=[jobs_workload], policies=["energy-aware"],
+                metrics=["energy", "edp"]).run()
+    assert res[0].policy == "energy-aware"
+    assert "objective=edp" in res[1].policy
+    # a policy OBJECT pins its own objective — the axis never mutates it
+    pinned = EnergyAwarePolicy(objective="edp")
+    res2 = Study(workloads=[jobs_workload], policies=[pinned],
+                 metrics=["energy"]).run()
+    assert pinned.objective == "edp"
+    assert "objective=edp" in res2[0].policy
+
+
+def test_confidence_bootstrap_resamples_jobs(jobs_workload):
+    res = Study(workloads=[jobs_workload], caps=[900.0, None]).run()
+    for stat in ("savings_pct", "savings_mwh", "savings_dt0_pct"):
+        cis = res.confidence(stat, n_boot=500)
+        for cell, ci in zip(res, cis):
+            assert ci.n == 250
+            assert ci.method == "bootstrap"
+            # the contribution-vector statistic is exactly the cell's
+            assert abs(ci.value - getattr(cell, stat)) \
+                <= 1e-9 * max(1.0, abs(ci.value))
+            assert ci.lo <= ci.value <= ci.hi
+            assert ci.value in ci
+    # deterministic under a fixed seed, different under another
+    a = res.confidence("savings_pct", n_boot=300, seed=1)[0]
+    b = res.confidence("savings_pct", n_boot=300, seed=1)[0]
+    c = res.confidence("savings_pct", n_boot=300, seed=2)[0]
+    assert (a.lo, a.hi) == (b.lo, b.hi)
+    assert (a.lo, a.hi) != (c.lo, c.hi)
+
+
+def test_confidence_jackknife_and_replay(jobs_workload):
+    res = Study(workloads=[jobs_workload], policies=["energy-aware"]).run()
+    for method in ("bootstrap", "jackknife"):
+        for stat in ("savings_pct", "dt_pct"):
+            ci = res.confidence(stat, method=method, n_boot=300)[0]
+            assert ci.n > 0
+            assert abs(ci.value - getattr(res[0], stat)) <= 1e-9
+            assert ci.lo <= ci.value <= ci.hi
+    with pytest.raises(ValueError, match="bootstrap"):
+        res.confidence(method="permute")
+
+
+def test_confidence_degrades_without_job_structure():
+    w = Workload.from_powers(synth_fleet_powers(300, seed=0))
+    res = Study(workloads=[w], caps=[900.0]).run()
+    ci = res.confidence("savings_pct")[0]
+    assert ci.n == 0
+    assert np.isnan(ci.lo) and np.isnan(ci.hi)
+    assert ci.value == res[0].savings_pct
+
+
+def test_replay_objective_knob():
+    powers = np.round(synth_fleet_powers(300, seed=2) * 10.0) / 10.0
+    want = replay(iter_array(powers), "energy-aware", objective="edp")
+    via_knob = replay(iter_array(powers), "energy-aware",
+                      **{"objective": "edp"})
+    via_object = replay(iter_array(powers),
+                        EnergyAwarePolicy(objective="edp"))
+    assert want.energy_new_j == via_knob.energy_new_j
+    assert want.energy_new_j == via_object.energy_new_j
+    # a conflicting policy OBJECT is an error, not a silent override
+    with pytest.raises(ValueError, match="objective"):
+        replay(iter_array(powers), EnergyAwarePolicy(objective="energy"),
+               objective="edp")
+
+
+def test_project_rows_carry_objective_pct():
+    rows = project([1500, 900], "freq", objective="edp")
+    for r in rows:
+        assert r.objective == "edp"
+        want = 100.0 * (1.0 - (1.0 - r.savings_pct / 100.0)
+                        * (1.0 + r.dt_pct / 100.0))
+        assert abs(r.objective_pct - want) < 1e-12
+    # default stays the identity
+    r = project([900], "freq")[0]
+    assert r.objective == "energy" and r.objective_pct == r.savings_pct
