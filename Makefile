@@ -47,4 +47,5 @@ examples:
 	$(PYTHON) examples/scenario_study.py
 	$(PYTHON) examples/power_broker.py
 	$(PYTHON) examples/sharded_study.py
+	$(PYTHON) examples/kernel_calibration.py
 	$(PYTHON) examples/continuous_serving.py

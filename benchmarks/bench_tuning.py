@@ -1,0 +1,75 @@
+"""Batched (config, freq) grid measurement against a per-candidate scalar
+loop: the simulated backend pushes every candidate profile through ONE
+``TransferSurface`` pass per sweep, where the loop pays a scalar
+``measure_one`` call per grid cell. Sharing the surface evaluation must
+win by >=5x — the perf contract behind ``tune()`` / the ``"calibrated:*"``
+resolver pipeline, gated in CI (benchmarks/baselines.json)."""
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.tuning import SimulatedBackend, VaiSpace, tune
+
+# 4 block tiles x 64 loopsizes = 256 candidates, 13-point frequency sweep
+LOOPSIZES = tuple(range(0, 256, 4))
+BLOCK_ROWS = (128, 256, 512, 1024)
+N_FREQS = 13
+
+
+def run(verbose: bool = False) -> List[Tuple[str, float, str]]:
+    space = VaiSpace(n_elems=1 << 18, loopsizes=LOOPSIZES,
+                     block_rows_options=BLOCK_ROWS)
+    backend = SimulatedBackend(space.chip)
+    candidates = space.candidates()
+    fr = np.asarray(backend.chip.freq_grid(N_FREQS))
+    n_cells = len(candidates) * fr.shape[0]
+
+    t_grid = float("inf")
+    for _ in range(3):                           # best-of-3: stable CI gate
+        t0 = time.perf_counter()
+        meas = backend.measure(space, candidates, fr)
+        t_grid = min(t_grid, time.perf_counter() - t0)
+
+    # the path the batched backend replaces: one scalar transfer-surface
+    # call per (candidate, frequency) cell
+    t0 = time.perf_counter()
+    loop_t = np.empty((len(candidates), fr.shape[0]))
+    loop_p = np.empty_like(loop_t)
+    for i, cand in enumerate(candidates):
+        for j, f in enumerate(fr):
+            loop_t[i, j], loop_p[i, j] = backend.measure_one(
+                space, cand, float(f))
+    t_loop = time.perf_counter() - t0
+
+    # same grid, different engine shape (bit-for-bit, not approximate)
+    assert np.array_equal(meas.time_s, loop_t)
+    assert np.array_equal(meas.power_w, loop_p)
+    speedup = t_loop / max(t_grid, 1e-12)
+
+    # end-to-end tuner pass (enumerate + measure + both selections)
+    t0 = time.perf_counter()
+    res = tune(space, backend, freq_fracs=fr, validate=False)
+    fast, green = res.best("time"), res.best("energy")
+    t_tune = time.perf_counter() - t0
+    assert fast.index != green.index             # fastest != lowest-energy
+
+    if verbose:
+        print(f"\n# tuning grid, {len(candidates)} candidates x "
+              f"{fr.shape[0]} freqs ({n_cells} cells)")
+        print(f"batched measure: {t_grid * 1e3:.1f} ms   per-cell loop: "
+              f"{t_loop * 1e3:.1f} ms   speedup: {speedup:.1f}x")
+        print(f"tune() end-to-end: {t_tune * 1e3:.1f} ms   "
+              f"time-best {fast.candidate.label}@{fast.freq_mhz} MHz vs "
+              f"energy-best {green.candidate.label}@{green.freq_mhz} MHz")
+    return [
+        ("tuning_grid_batched", t_grid * 1e6,
+         f"speedup_vs_loop={speedup:.1f}x;n_cells={n_cells}"),
+        ("tuning_tune_e2e", t_tune * 1e6,
+         f"n_candidates={len(candidates)}"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run(verbose=True):
+        print(",".join(str(x) for x in r))

@@ -20,7 +20,8 @@ def main(argv=None) -> None:
                             bench_modal, bench_objectives, bench_projection,
                             bench_roofline_table, bench_scenarios,
                             bench_serving, bench_sharded, bench_stream,
-                            bench_surface, bench_train_step, bench_vai)
+                            bench_surface, bench_train_step, bench_tuning,
+                            bench_vai)
     suites = [
         ("vai", bench_vai),                  # Figs. 4/5, Table III
         ("membw", bench_membw),              # Fig. 6
@@ -32,6 +33,7 @@ def main(argv=None) -> None:
         ("stream", bench_stream),            # chunked replay vs sample loop
         ("sharded", bench_sharded),          # jitted mesh replay vs numpy
         ("scenarios", bench_scenarios),      # study grid vs per-cell loop
+        ("tuning", bench_tuning),            # batched grid vs per-cell loop
         ("broker", bench_broker),            # online event loop @ 50k jobs
         ("roofline", bench_roofline_table),  # §Roofline source
         ("serving", bench_serving),          # continuous vs blocking decode

@@ -1,0 +1,89 @@
+"""Kernel autotuning -> calibrated response tables -> a Study cell.
+
+The full ROADMAP item 4 loop on one page:
+
+1. enumerate the VAI kernel's (block_rows, loopsize) config space with
+   TPU-aware pruning, and validate the survivors bit-for-bit against the
+   jnp oracle in interpret mode;
+2. tune the joint (config, freq) grid under two objectives — the fastest
+   cell and the lowest-energy cell of the same grid differ;
+3. invert the measured grid through ``TransferSurface.infer_profiles``
+   into calibrated per-kernel ResponseTables, round-trip them through the
+   JSON cache bit-for-bit, and register the calibration;
+4. feed ``tables="calibrated:vai"`` into a fleet Study cell next to the
+   paper's measured MI250X columns.
+
+    PYTHONPATH=src python examples/kernel_calibration.py
+"""
+import os
+import tempfile
+
+from repro.power import Study, Workload
+from repro.power.scenarios import resolve_tables
+from repro.tuning import (VaiSpace, calibrate, load_calibration,
+                          register_calibration, save_calibration, tune)
+
+
+def main() -> None:
+    # 1. enumerate + prune + validate (a fixed loopsize: tile choice only)
+    space = VaiSpace(n_elems=1 << 18, loopsizes=(64,),
+                     block_rows_options=(64, 96, 128, 256, 512, 1024, 4096))
+    kept, pruned = space.enumerate_all()
+    print(f"# {space!r}")
+    for cfg, why in pruned:
+        print(f"pruned {dict(cfg)}: {why}")
+    errs = [space.validate(c) for c in kept]
+    print(f"validated {len(kept)} candidates vs kernels.ref "
+          f"(max abs err {max(errs):.1f} — bit-for-bit)")
+
+    # 2. joint (config, freq) tuning: fastest != lowest-energy
+    result = tune(space, validate=False)        # already validated above
+    fast = result.best("time")
+    green = result.best("energy")
+    edp = result.best("edp")
+    print("\n# joint (config, freq) selection")
+    print(result.summary(objectives=("time", "energy", "edp")))
+    assert fast.index != green.index
+    print(f"energy-optimal cell saves "
+          f"{100 * (1 - green.energy_j / fast.energy_j):.1f}% energy vs the "
+          f"step-time-optimal cell for {green.time_s / fast.time_s:.2f}x "
+          f"the time (edp splits the difference: {edp.freq_mhz} MHz)")
+
+    # 3. calibrate, cache round-trip, register
+    meas = tune(VaiSpace(n_elems=1 << 18,
+                         loopsizes=(0, 2, 8, 32, 128, 512, 1024)),
+                validate=False).measurement
+    cal = calibrate(meas)
+    print(f"\n# {cal!r}")
+    path = os.path.join(tempfile.mkdtemp(), "vai_calibration.json")
+    save_calibration(cal, path)
+    cal2 = load_calibration(path)
+    assert cal2.tables == cal.tables            # bit-for-bit round-trip
+    with open(path, "rb") as fh:
+        first = fh.read()
+    save_calibration(cal2, path)
+    with open(path, "rb") as fh:
+        assert fh.read() == first               # byte-identical re-save
+    register_calibration(cal2)
+    print(f"cache round-trip bit-for-bit OK ({path})")
+
+    tables = resolve_tables("calibrated:vai")
+    print(f"resolve_tables('calibrated:vai') -> {tables.source}")
+
+    # 4. the calibrated tables in a fleet Study cell, next to the paper's
+    caps = [1500, 1300, 1100, 900]
+    study = Study(
+        workloads=[Workload.synthetic(200_000, seed=0)],
+        caps=caps, tables=tables)
+    paper = Study(
+        workloads=[Workload.synthetic(200_000, seed=0)],
+        caps=caps, tables="measured")
+    res, ref = study.run(), paper.run()
+    print("\n# fleet projection: calibrated vai tables vs measured MI250X")
+    print(f"{'cap_mhz':>7s}  {'calibrated sav%':>15s}  {'measured sav%':>13s}")
+    for cap, a, b in zip(caps, res.savings_pct, ref.savings_pct):
+        print(f"{cap:7d}  {a:15.2f}  {b:13.2f}")
+
+
+if __name__ == "__main__":
+    main()

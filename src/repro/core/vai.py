@@ -7,18 +7,14 @@ channel).
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_vai import VAISuiteConfig
 from repro.core.power_model import ChipModel
 from repro.core.hardware import ChipSpec, TPU_V5E
-from repro.kernels import ops as kops
 from repro.kernels import vai as vai_kernel
 
 
@@ -46,35 +42,50 @@ def _loopsize_for(ai: float, itemsize: int = 4) -> int:
 def run_sweep(cfg: VAISuiteConfig = VAISuiteConfig(),
               chip: ChipSpec = TPU_V5E,
               execute_kernel: bool = True) -> List[VAIPoint]:
-    """Full (AI x frequency) and (AI x power-cap) sweep. ``execute_kernel``
-    actually runs the Pallas kernel (interpret mode on CPU) for a subset of
-    elements to validate numerics; the (time, power) surface comes from the
-    calibrated model."""
-    model = ChipModel(chip)
-    points: List[VAIPoint] = []
-    rows = max(cfg.elements // vai_kernel.LANE, vai_kernel.LANE)
-    key = jax.random.PRNGKey(0)
-    a = jnp.full((rows, vai_kernel.LANE), 1.3, jnp.float32)
-    b = jnp.arange(rows * vai_kernel.LANE, dtype=jnp.float32).reshape(
-        rows, vai_kernel.LANE) % 7.0
-    c = jnp.full((rows, vai_kernel.LANE), 1.3, jnp.float32)
+    """Full (AI x frequency) and (AI x power-cap) sweep.
 
-    for ai in cfg.intensities:
-        L = _loopsize_for(ai)
-        if execute_kernel and L <= 64:   # CPU-interpret budget
-            out = kops.vai_op(a, b, c, loopsize=L)
-            out.block_until_ready()
-        profile = model.vai_profile(cfg.elements, L)
-        t0 = model.step_time(profile, 1.0)
-        e0 = model.energy_j(profile, 1.0)
-        flops, byts = vai_kernel.vai_flops_bytes(cfg.elements, L)
+    Re-seated on the :mod:`repro.tuning` harness: the kernel's
+    :class:`~repro.tuning.VaiSpace` enumerates one candidate per
+    intensity (at the kernel's default tile) and supplies its analytic
+    profile under :meth:`PerfParams.ideal` — bit-for-bit
+    ``ChipModel.vai_profile`` — while the deterministic
+    :class:`~repro.tuning.SimulatedBackend` answers every (freq, cap)
+    point. ``execute_kernel`` validates each unique loopsize <= 64
+    against :mod:`repro.kernels.ref` in interpret mode (the CPU budget),
+    which is strictly stronger than the old run-without-comparing probe.
+    """
+    from repro.tuning.harness import SimulatedBackend
+    from repro.tuning.space import PerfParams, VaiSpace
+
+    model = ChipModel(chip)
+    loopsizes = [_loopsize_for(ai) for ai in cfg.intensities]
+    space = VaiSpace(n_elems=cfg.elements, loopsizes=loopsizes,
+                     block_rows_options=(vai_kernel.DEFAULT_BLOCK_ROWS,),
+                     chip=model.spec)
+    backend = SimulatedBackend(model, perf=PerfParams.ideal())
+    candidates, pruned = space.enumerate_all()
+    if pruned:
+        reasons = "; ".join(f"{dict(cfg_)}: {why}" for cfg_, why in pruned)
+        raise ValueError(
+            f"VAI sweep configuration does not tile the kernel: {reasons}")
+
+    points: List[VAIPoint] = []
+    validated: set = set()
+    for ai, cand in zip(cfg.intensities, candidates):
+        L = cand.get("loopsize")
+        if execute_kernel and L <= 64 and L not in validated:
+            space.validate(cand)         # CPU-interpret budget
+            validated.add(L)
+        profile = space.profile(cand, model, backend.perf)
+        t0, p0 = backend.measure_one(space, cand, 1.0)
+        e0 = p0 * t0
+        flops, byts = cand.flops, cand.hbm_bytes
 
         for f_mhz in cfg.frequencies_mhz:
             frac = f_mhz / chip.f_nominal_mhz * (
                 chip.f_nominal_mhz / 1700)   # grid defined on 1700 nominal
             frac = min(max(frac, chip.f_min_mhz / chip.f_nominal_mhz), 1.0)
-            t = model.step_time(profile, frac)
-            p = model.power_w(profile, frac)
+            t, p = backend.measure_one(space, cand, frac)
             points.append(VAIPoint(
                 ai=ai, loopsize=L, freq_mhz=f_mhz, power_cap_w=None,
                 tflops=flops / t / 1e12, gbytes_s=byts / t / 1e9,
@@ -83,8 +94,7 @@ def run_sweep(cfg: VAISuiteConfig = VAISuiteConfig(),
         for cap_frac in (1.0, 0.9, 0.72, 0.54, 0.36, 0.25, 0.18):
             cap_w = cap_frac * chip.tdp_w
             frac = model.freq_for_power_cap(profile, cap_w)
-            t = model.step_time(profile, frac)
-            p = model.power_w(profile, frac)
+            t, p = backend.measure_one(space, cand, frac)
             points.append(VAIPoint(
                 ai=ai, loopsize=L, freq_mhz=int(frac * chip.f_nominal_mhz),
                 power_cap_w=cap_w,

@@ -1,3 +1,12 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Only the pure cost-model helpers are re-exported here; the kernels
+# themselves stay behind their submodules (repro.kernels.vai etc. —
+# several callers import the submodules by these same names, so the
+# package namespace must not shadow them with the functions).
+from repro.kernels.membw import membw_bytes
+from repro.kernels.vai import vai_flops_bytes
+
+__all__ = ["membw_bytes", "vai_flops_bytes"]

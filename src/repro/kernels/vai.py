@@ -13,6 +13,7 @@ frequency and power caps.
 from __future__ import annotations
 
 import functools
+import operator
 
 import jax
 import jax.numpy as jnp
@@ -41,11 +42,33 @@ def _vai_kernel(a_ref, b_ref, c_ref, o_ref, *, loopsize: int):
 def vai(a: jax.Array, b: jax.Array, c: jax.Array, *, loopsize: int,
         block_rows: int = DEFAULT_BLOCK_ROWS,
         interpret: bool | None = None) -> jax.Array:
-    """a, b, c: [rows, 128] f32; returns updated c."""
+    """a, b, c: [rows, 128] f32; returns updated c.
+
+    ``loopsize`` must be a non-negative int (0 = the stream-copy c <- b);
+    ``block_rows`` must be positive and, after clamping to ``rows``,
+    divide the row count — rejected with a ``ValueError`` here rather
+    than a grid assert deep inside ``pallas_call``."""
     assert a.shape == b.shape == c.shape and a.shape[1] == LANE, a.shape
+    try:
+        loopsize = operator.index(loopsize)
+        block_rows = operator.index(block_rows)
+    except TypeError:
+        raise ValueError(
+            f"loopsize and block_rows must be ints, got "
+            f"loopsize={loopsize!r}, block_rows={block_rows!r}") from None
+    if loopsize < 0:
+        raise ValueError(
+            f"loopsize must be non-negative (0 = stream copy), "
+            f"got {loopsize}")
+    if block_rows <= 0:
+        raise ValueError(
+            f"block_rows must be positive, got {block_rows}")
     rows = a.shape[0]
     br = min(block_rows, rows)
-    assert rows % br == 0, (rows, br)
+    if rows % br:
+        raise ValueError(
+            f"block_rows={block_rows} does not tile the {rows}-row input: "
+            f"rows % {br} == {rows % br} (pick a divisor of {rows})")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     grid = (rows // br,)

@@ -62,6 +62,12 @@ scenarios — the declarative what-if surface: a :class:`Scenario` names one
             one :func:`resolve_tables`. The entry points above are
             single-cell views of this engine
 
+The sibling package ``repro.tuning`` closes the calibration loop from the
+kernel side: it enumerates and validates each pallas kernel's config
+space, measures (config, freq) grids, and inverts them through
+``TransferSurface.infer_profiles`` into per-kernel ``ResponseTables``
+that any Study cell consumes via ``tables="calibrated:<kernel>"``.
+
 Typical driver:
 
     from repro.power import EnergySession, FleetAnalysis, StepProfile

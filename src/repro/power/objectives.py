@@ -50,7 +50,7 @@ import numpy as np
 
 __all__ = [
     "Objective", "OBJECTIVES", "SWEEP_OBJECTIVES", "GridDecisions",
-    "get_objective", "check_objective", "decision_grid",
+    "get_objective", "check_objective", "decision_grid", "grid_argbest",
 ]
 
 #: Default dT tolerance (percent) for the ``dt_bounded_savings`` cap
@@ -191,6 +191,39 @@ def check_objective(objective: ObjectiveLike, *,
     brokers store the *string* so frozen dataclasses stay hashable and
     executor memo signatures stay value-keyed)."""
     return get_objective(objective, what=what).name
+
+
+def grid_argbest(objective: ObjectiveLike, energy_j, time_s, power_w=None,
+                 mask=None, *, what: str = "objective") -> Tuple[int, ...]:
+    """Index of the best cell of a dense operating-point grid under an
+    objective — the selection primitive behind the joint (config, freq)
+    kernel tuner (:meth:`repro.tuning.TuningResult.best`).
+
+    ``energy_j`` / ``time_s`` / ``power_w`` broadcast to one grid; the
+    objective's (minimized) score is evaluated elementwise and the argmin
+    returned as an unraveled index tuple. ``mask`` (broadcastable bool,
+    True = admissible) excludes cells — e.g. a slowdown-budget
+    constraint; if no admissible cell has a finite score, raises
+    ``ValueError``. Unregistered :class:`Objective` instances pass
+    through, so callers can select on ad-hoc scores (pure step time)
+    without touching the registry.
+    """
+    obj = get_objective(objective, what=what)
+    e, t = np.broadcast_arrays(np.asarray(energy_j, dtype=np.float64),
+                               np.asarray(time_s, dtype=np.float64))
+    p = None
+    if power_w is not None:
+        e, t, p = np.broadcast_arrays(
+            e, t, np.asarray(power_w, dtype=np.float64))
+    s = np.asarray(obj.score(e, t, p), dtype=np.float64)
+    if mask is not None:
+        s = np.where(np.broadcast_to(mask, s.shape), s, np.inf)
+    if s.size == 0 or not np.isfinite(s).any():
+        raise ValueError(
+            f"no grid cell is admissible under objective {obj.name!r}"
+            + ("" if mask is None else " with the given constraint mask"))
+    return tuple(int(i) for i in np.unravel_index(int(np.argmin(s)),
+                                                  s.shape))
 
 
 # ---------------------------------------------------------------------------

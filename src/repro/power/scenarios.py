@@ -96,7 +96,9 @@ from repro.power.policies import PolicyLike, PowerPolicy, get_policy
 #: What every ``tables=`` parameter now accepts: ``None`` / ``"measured"``
 #: (the paper's measured MI250X columns), an explicit
 #: :class:`ResponseTables`, a chip (name / spec / model) for a model-derived
-#: table, or ``"auto"`` (measured on the paper's chip, model elsewhere).
+#: table, ``"calibrated:<kernel>"`` (tuner-derived tables from
+#: :func:`repro.tuning.calibrated_tables`), or ``"auto"`` (measured on the
+#: paper's chip, model elsewhere).
 TablesLike = Union[None, str, ResponseTables, ChipSpec, ChipModel]
 
 _MEASURED_NAMES = ("measured", "mi250x-table-iii", "paper")
@@ -122,6 +124,12 @@ def resolve_tables(tables: TablesLike = "auto", *, kind: str = "freq",
     * a chip name / :class:`ChipSpec` / :class:`ChipModel` -> the cached
       model-derived :func:`~repro.power.surface.response_table` of that
       chip;
+    * ``"calibrated:<kernel>"`` -> tuner-derived tables for an in-tree
+      pallas kernel (``vai`` / ``membw`` / ``flash_attention``) from the
+      :mod:`repro.tuning` calibration pipeline — a registered (measured /
+      cache-loaded) calibration for (kernel, kind, ``chip``) if one
+      exists, else the kernel's default config space measured on the
+      deterministic simulated backend;
     * ``"auto"`` -> measured when the evaluation ``chip`` is the paper's
       MI250X GCD (or unspecified), model-derived for any other chip.
     """
@@ -131,6 +139,10 @@ def resolve_tables(tables: TablesLike = "auto", *, kind: str = "freq",
     if isinstance(tables, ResponseTables):
         check_tables_kind(tables, kind)
         return tables
+    if isinstance(tables, str) and tables.startswith("calibrated:"):
+        from repro.tuning.calibrate import calibrated_tables
+        kernel = tables.split(":", 1)[1]
+        return calibrated_tables(kernel, kind=kind, chip=chip)
     if isinstance(tables, str) and tables == "auto":
         if chip is None:
             return None

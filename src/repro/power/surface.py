@@ -427,29 +427,12 @@ def _mb_family(chip: ChipModel) -> List[StepProfile]:
     return [StepProfile(compute_s=r, memory_s=1.0) for r in MB_TABLE_RATIOS]
 
 
-def response_table(chip: Union[ChipSpec, str, ChipModel],
-                   caps: Optional[Sequence[float]] = None,
-                   kind: str = "freq", grid: int = 64,
-                   backend: str = "numpy") -> ResponseTables:
-    """Synthesize Table III-style response columns for any registered chip.
-
-    For each cap the VAI (compute-family) and MB (memory-family) benchmark
-    profiles are pushed through the chip's :class:`TransferSurface` in one
-    ``(profiles, caps)`` pass; the columns are the family averages relative
-    to the uncapped run, in the paper's format: ``power %`` as the ratio of
-    mean powers, ``runtime %`` / ``energy %`` as means of per-profile
-    ratios (matching :func:`repro.core.vai.response_table`).
-
-    ``kind="freq"``: caps are clock values in MHz (default: the chip's own
-    6-point DVFS grid). ``kind="power"``: caps are watt limits (default:
-    :data:`DEFAULT_POWER_CAP_FRACS` of TDP), enforced RAPL-style through
-    :meth:`TransferSurface.freq_for_power_cap`.
-
-    The result plugs into :func:`repro.core.projection.project_batch` /
-    ``FleetAnalysis.project(..., tables=...)`` in place of the measured
-    MI250X tables — the cross-chip what-if projection.
-    """
-    surf = TransferSurface(chip, backend=backend)
+def _resolve_caps(surf: TransferSurface,
+                  caps: Optional[Sequence[float]],
+                  kind: str) -> Tuple[List[float], List[int]]:
+    """Default/validate a cap list for response columns; returns the caps
+    and their integer table keys (tables are integer-keyed — caps that
+    collide after rounding are rejected up front)."""
     model = surf.chip
     if kind == "freq":
         if caps is None:
@@ -459,18 +442,46 @@ def response_table(chip: Union[ChipSpec, str, ChipModel],
             caps = [frac * surf.spec.tdp_w for frac in DEFAULT_POWER_CAP_FRACS]
     else:
         raise ValueError(f"kind must be 'freq' or 'power', got {kind!r}")
-    caps = list(caps)
+    caps = [float(c) for c in caps]
     keys = [int(round(c)) for c in caps]
     if len(set(keys)) != len(keys):
         raise ValueError(
             f"caps {caps} collide after integer rounding ({keys}); response "
             f"tables are integer-keyed — space caps at least 1 "
             f"{'MHz' if kind == 'freq' else 'W'} apart")
+    return caps, keys
+
+
+def family_response_tables(chip: Union[ChipSpec, str, ChipModel],
+                           families: "dict",
+                           caps: Optional[Sequence[float]] = None,
+                           kind: str = "freq", grid: int = 64,
+                           backend: str = "numpy",
+                           source: Optional[str] = None) -> ResponseTables:
+    """Synthesize Table III-style response columns from arbitrary benchmark
+    families — the engine behind :func:`response_table` and the calibrated
+    tables of :mod:`repro.tuning.calibrate`.
+
+    ``families`` maps ``"vai"`` / ``"mb"`` to a profile family (anything
+    :meth:`ProfileArray.coerce` accepts — StepProfiles or inferred
+    ProfileArrays). For each cap the family is pushed through the chip's
+    :class:`TransferSurface` in one ``(profiles, caps)`` pass; columns are
+    the family averages relative to the uncapped run, in the paper's
+    format: ``power %`` as the ratio of mean powers, ``runtime %`` /
+    ``energy %`` as means of per-profile ratios (matching
+    :func:`repro.core.vai.response_table`).
+    """
+    surf = TransferSurface(chip, backend=backend)
+    model = surf.chip
+    caps, keys = _resolve_caps(surf, caps, kind)
+    missing = [k for k in ("vai", "mb") if k not in families]
+    if missing:
+        raise ValueError(f"families must provide 'vai' and 'mb' columns; "
+                         f"missing {missing}")
 
     columns = {}
-    for name, family in (("vai", _vai_family(model)),
-                         ("mb", _mb_family(model))):
-        pa = ProfileArray.from_profiles(family, xp=surf.xp)
+    for name in ("vai", "mb"):
+        pa = ProfileArray.coerce(families[name], xp=surf.xp)
         grid_pa = pa.expand()                                 # (P, 1)
         if kind == "freq":
             fr = np.asarray([model.freq_frac(c) for c in caps])  # (C,)
@@ -491,5 +502,31 @@ def response_table(chip: Union[ChipSpec, str, ChipModel],
             k: (float(power_pct[j]), float(runtime_pct[j]),
                 float(energy_pct[j]))
             for j, k in enumerate(keys)}
-    return ResponseTables(vai=columns["vai"], mb=columns["mb"], kind=kind,
-                          source=f"model:{surf.spec.name}")
+    return ResponseTables(
+        vai=columns["vai"], mb=columns["mb"], kind=kind,
+        source=source if source is not None else f"model:{surf.spec.name}")
+
+
+def response_table(chip: Union[ChipSpec, str, ChipModel],
+                   caps: Optional[Sequence[float]] = None,
+                   kind: str = "freq", grid: int = 64,
+                   backend: str = "numpy") -> ResponseTables:
+    """Synthesize Table III-style response columns for any registered chip.
+
+    The VAI (compute-family) and MB (memory-family) benchmark profiles go
+    through :func:`family_response_tables` — see there for the column
+    math.
+
+    ``kind="freq"``: caps are clock values in MHz (default: the chip's own
+    6-point DVFS grid). ``kind="power"``: caps are watt limits (default:
+    :data:`DEFAULT_POWER_CAP_FRACS` of TDP), enforced RAPL-style through
+    :meth:`TransferSurface.freq_for_power_cap`.
+
+    The result plugs into :func:`repro.core.projection.project_batch` /
+    ``FleetAnalysis.project(..., tables=...)`` in place of the measured
+    MI250X tables — the cross-chip what-if projection.
+    """
+    model = ChipModel(chip)
+    return family_response_tables(
+        model, {"vai": _vai_family(model), "mb": _mb_family(model)},
+        caps=caps, kind=kind, grid=grid, backend=backend)

@@ -1,0 +1,53 @@
+"""Kernel autotuning that calibrates the power model (ROADMAP item 4).
+
+The bridge between the kernel tier and the power tier, in four layers:
+
+* :mod:`repro.tuning.space` — per-kernel config-space enumerators with
+  TPU-aware pruning (MXU/sublane alignment, grid divisibility, VMEM
+  footprint) and oracle validation against :mod:`repro.kernels.ref` in
+  interpret mode (bit-for-bit for VAI/membw, pinned tolerance for flash
+  attention's reassociated softmax);
+* :mod:`repro.tuning.harness` — times surviving candidates across a
+  frequency sweep: :class:`WallClockBackend` on real hardware,
+  :class:`SimulatedBackend` as a deterministic
+  :class:`~repro.power.surface.TransferSurface` timer for hermetic CI;
+* :mod:`repro.tuning.calibrate` — inverts the (config, freq, time,
+  power) grid through ``TransferSurface.infer_profiles`` into per-kernel
+  :class:`~repro.core.projection.ResponseTables`, served by
+  ``resolve_tables("calibrated:<kernel>")`` and persistable to a
+  bit-for-bit JSON cache;
+* :mod:`repro.tuning.tuner` — the joint (config, freq) selector under
+  any :class:`~repro.power.objectives.Objective`: the fastest cell and
+  the lowest-energy cell of the same grid generally differ.
+
+Quick start::
+
+    from repro.tuning import VaiSpace, tune
+
+    result = tune(VaiSpace(loopsizes=(256,)))
+    fast = result.best("time")        # classic autotuner pick
+    green = result.best("energy")     # usually a different cell
+"""
+from repro.tuning.space import (Candidate, FlashAttentionSpace, KernelSpace,
+                                MembwSpace, PerfParams, VaiSpace,
+                                ValidationError)
+from repro.tuning.harness import (Measurement, SimulatedBackend,
+                                  WallClockBackend, default_freq_fracs)
+from repro.tuning.calibrate import (SPACES, CalibrationResult, calibrate,
+                                    calibrated_tables, load_calibration,
+                                    register_calibration, save_calibration)
+from repro.tuning.tuner import (STEP_TIME, TunedCell, TuningResult, tune)
+
+__all__ = [
+    # space
+    "Candidate", "KernelSpace", "PerfParams", "ValidationError",
+    "VaiSpace", "MembwSpace", "FlashAttentionSpace",
+    # harness
+    "Measurement", "SimulatedBackend", "WallClockBackend",
+    "default_freq_fracs",
+    # calibrate
+    "SPACES", "CalibrationResult", "calibrate", "calibrated_tables",
+    "load_calibration", "register_calibration", "save_calibration",
+    # tuner
+    "STEP_TIME", "TunedCell", "TuningResult", "tune",
+]
